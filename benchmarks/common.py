@@ -1,0 +1,48 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+from statistics import median
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.oracle import HeuristicOracle  # noqa: E402
+from repro.core.pipeline import ConstructionPipeline, PipelineConfig  # noqa: E402
+from repro.data.corpus import AuthTraceConfig, generate_authtrace  # noqa: E402
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def timeit_median(fn, n_iters: int = 200, warmup: int = 50) -> float:
+    """Median wall-clock per call, in ms (paper protocol: median over
+    repeated runs after warmup)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n_iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1000.0)
+    return median(ts)
+
+
+def build_wiki(n_docs=120, n_questions=60, seed=0, cfg: PipelineConfig | None = None,
+               oracle=None):
+    docs, questions = generate_authtrace(
+        AuthTraceConfig(n_docs=n_docs, n_questions=n_questions, seed=seed))
+    pipe = ConstructionPipeline(cfg or PipelineConfig(),
+                                oracle or HeuristicOracle())
+    pipe.bootstrap(docs)
+    for i in range(0, len(docs), 16):
+        pipe.ingest(docs[i:i + 16])
+    return pipe, docs, questions
+
+
+def emit(rows: list[tuple], header: str | None = None):
+    """Print ``name,us_per_call,derived`` CSV rows (harness contract)."""
+    if header:
+        print(f"# {header}")
+    for row in rows:
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,56 @@
+"""Fig. 5: end-to-end scalability over nested corpus regimes.
+
+Three nested corpus sizes; per regime: structural footprint (directories
+vs pages — the 'directories flat, pages linear' separation) and the
+first-token/navigation latency profile (Avg/P50/P95/P99) — checking the
+sub-linear latency scaling claim of §VI-F.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from common import build_wiki, emit
+
+from repro.core.cache import TieredCache
+from repro.core.navigate import Navigator, WallClockBudget
+from repro.core.oracle import HeuristicOracle
+from repro.core.schema import structure_counts
+
+
+def run(seed: int = 0):
+    regimes = {"small": 60, "medium": 120, "full": 240}
+    rows = []
+    out = {}
+    for name, n_docs in regimes.items():
+        pipe, docs, questions = build_wiki(
+            n_docs=n_docs, n_questions=60, seed=seed)
+        cache = TieredCache(pipe.store, bus=pipe.bus)
+        cache.prewarm()
+        nav = Navigator(pipe.store, HeuristicOracle(), cache=cache)
+        lats = []
+        for i in range(300):
+            q = questions[i % len(questions)]
+            t0 = time.perf_counter()
+            nav.nav(q.text, WallClockBudget(50.0))
+            lats.append((time.perf_counter() - t0) * 1000)
+        counts = structure_counts(pipe.store)
+        res = {
+            "directories": counts["directories"],
+            "pages": counts["pages"],
+            "documents": counts["documents"],
+            "lat_avg": float(np.mean(lats)),
+            "lat_p50": float(np.percentile(lats, 50)),
+            "lat_p95": float(np.percentile(lats, 95)),
+            "lat_p99": float(np.percentile(lats, 99)),
+        }
+        out[name] = res
+        for k, v in res.items():
+            rows.append((f"fig5_{name}_{k}", round(v, 3), ""))
+    emit(rows, header="Fig 5: scalability across corpus regimes")
+    return out
+
+
+if __name__ == "__main__":
+    run()

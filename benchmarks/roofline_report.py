@@ -1,0 +1,58 @@
+"""§Roofline report: the three-term model per (arch × shape × mesh),
+read from the dry-run artifacts (no recompilation).
+
+    compute   = HLO_FLOPs(per device)     / peak_FLOP/s
+    memory    = HLO_bytes(per device)     / HBM_bw
+    collective= collective_bytes(per dev) / link_bw
+
+Flags the dominant term, the MODEL_FLOPS/HLO_FLOPS 'useful compute'
+ratio, and per-device memory vs the 16 GiB v5e HBM budget.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from common import ARTIFACTS, emit
+
+HBM_BUDGET = 16 * 2**30
+
+
+def load_cells(mesh: str | None = None):
+    cells = []
+    for fn in sorted((ARTIFACTS / "dryrun").glob("*.json")):
+        rec = json.loads(fn.read_text())
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def run(mesh: str = "16x16"):
+    rows = []
+    for rec in load_cells(mesh):
+        tag = f"{rec['arch']}__{rec['shape']}"
+        if rec["status"] == "skip":
+            rows.append((f"roofline_{tag}", "skip",
+                         rec.get("skip_reason", "")[:40]))
+            continue
+        if rec["status"] != "ok":
+            rows.append((f"roofline_{tag}", "error", rec.get("error", "")[:60]))
+            continue
+        r = rec["roofline"]
+        mem = rec["memory"]["total_per_device"]
+        rows.append((
+            f"roofline_{tag}",
+            round(max(r["t_compute_s"], r["t_memory_s"],
+                      r["t_collective_s"]), 4),
+            f"dom={r['dominant']};tc={r['t_compute_s']:.3e};"
+            f"tm={r['t_memory_s']:.3e};tx={r['t_collective_s']:.3e};"
+            f"useful={r['useful_flops_ratio']:.2f};"
+            f"mem={mem/2**30:.1f}GiB;"
+            f"fits16G={'Y' if mem <= HBM_BUDGET else 'N'}"))
+    emit(rows, header=f"Roofline terms per cell ({mesh})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

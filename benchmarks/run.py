@@ -1,0 +1,48 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus # section headers).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table4     # one table
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import table2_backends  # noqa: E402
+import table3_schema  # noqa: E402
+import table4_end2end  # noqa: E402
+import table5_online  # noqa: E402
+import table6_ablation  # noqa: E402
+import fig5_scaling  # noqa: E402
+import errorbook_bench  # noqa: E402
+import roofline_report  # noqa: E402
+
+ALL = {
+    "table2": lambda: table2_backends.run(),
+    "table3": lambda: table3_schema.run(),
+    "table4": lambda: table4_end2end.run(),
+    "table5": lambda: table5_online.run(),
+    "table6": lambda: table6_ablation.run(),
+    "fig5": lambda: fig5_scaling.run(),
+    "errorbook": lambda: errorbook_bench.run(),
+    "roofline": lambda: roofline_report.run(),
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    for name in which:
+        if name not in ALL:
+            print(f"unknown benchmark {name!r}; have {sorted(ALL)}")
+            continue
+        print(f"\n##### {name} #####")
+        ALL[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Table II: median per-operator latency (Q1–Q4) × storage backend.
+
+Reproduces the paper's protocol: a MEDIUM wiki (~2,000 KV pairs), 100
+random target paths/prefixes per operator, 1,000 queries per backend
+after a 200-query warmup, medians reported.  Backends: the WikiKV
+path-as-key layout on the MemKV LSM engine (our method), FS, SQL
+(sqlite ≈ PostgreSQL+ltree) and a property-graph store (≈ Neo4j) —
+all in-process and memory-resident, so the comparison isolates the
+storage model exactly as §VI-B argues.
+
+Also reports the tensorized (JAX) WikiKV store's batched Q1/Q4 as the
+TPU-native data point (batch = 256 queries per launch, amortized).
+"""
+from __future__ import annotations
+
+import random
+
+from common import build_wiki, emit, timeit_median
+
+from repro.core import paths as P
+from repro.core.backends import ALL_BACKENDS
+
+
+def collect_items(pipe):
+    items = []
+    for path in pipe.store.all_paths():
+        if P.is_prefix(P.META_PREFIX, path):
+            continue
+        rec = pipe.store.get(path)
+        if rec is not None:
+            items.append((path, rec))
+    return items
+
+
+def run(n_iters: int = 1000, warmup: int = 200, seed: int = 0):
+    pipe, docs, _ = build_wiki(n_docs=160, n_questions=80, seed=seed)
+    items = collect_items(pipe)
+    rng = random.Random(seed)
+    paths = [p for p, _ in items]
+    entity_paths = [p for p in paths if P.depth(p) >= 2] or paths
+    dir_paths = [p for p, r in items if hasattr(r, "sub_dirs")] or ["/"]
+    targets = [rng.choice(entity_paths) for _ in range(100)]
+    dirs = [rng.choice(dir_paths) for _ in range(100)]
+    prefixes = [rng.choice(["/" + P.segments(p)[0] for p in entity_paths])
+                for _ in range(100)]
+
+    rows = []
+    for name, cls in sorted(ALL_BACKENDS.items()):
+        be = cls()
+        try:
+            be.load(items)
+            it = iter(range(10**9))
+            q1 = timeit_median(
+                lambda: be.q1_get(targets[next(it) % 100]),
+                n_iters, warmup)
+            it = iter(range(10**9))
+            q2 = timeit_median(
+                lambda: be.q2_ls(dirs[next(it) % 100]), n_iters, warmup)
+            it = iter(range(10**9))
+            q3 = timeit_median(
+                lambda: be.q3_navigate(targets[next(it) % 100]),
+                n_iters // 4, warmup // 4)
+            it = iter(range(10**9))
+            q4 = timeit_median(
+                lambda: be.q4_search(prefixes[next(it) % 100]),
+                n_iters // 4, warmup // 4)
+            rows.append((f"table2_{name}_q1", round(q1 * 1000, 2), "us"))
+            rows.append((f"table2_{name}_q2", round(q2 * 1000, 2), "us"))
+            rows.append((f"table2_{name}_q3", round(q3 * 1000, 2), "us"))
+            rows.append((f"table2_{name}_q4", round(q4 * 1000, 2), "us"))
+        finally:
+            be.close()
+
+    # tensorized (device) store: batched operators, amortized per query
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import tensorstore as TS
+    wiki = TS.freeze(pipe.store)
+    batch_paths = [rng.choice(paths) for _ in range(256)]
+    q = np.array([TS._digest_pair(p) for p in batch_paths], dtype=np.uint64)
+    qhi = jnp.asarray(q[:, 0].astype(np.uint32))
+    qlo = jnp.asarray(q[:, 1].astype(np.uint32))
+
+    def dev_q1():
+        TS.lookup_ref(wiki.keys_hi, wiki.keys_lo, qhi, qlo).block_until_ready()
+
+    t = timeit_median(dev_q1, 200, 50)
+    rows.append(("table2_tensor_q1_batch256", round(t * 1000, 2),
+                 f"us_per_batch;{round(t * 1000 / 256, 3)}us_per_query"))
+    pref = TS.pack_path("/relationships", int(wiki.lex_tokens.shape[1]))
+    plen = jnp.int32(len("/relationships"))
+
+    def dev_q4():
+        TS.prefix_match_ref(wiki.lex_tokens, jnp.asarray(pref),
+                            plen).block_until_ready()
+
+    t4 = timeit_median(dev_q4, 200, 50)
+    rows.append(("table2_tensor_q4_scan", round(t4 * 1000, 2),
+                 f"us;rows={wiki.n}"))
+    rows.append(("table2_wiki_kv_pairs", len(items), "count"))
+    emit(rows, header="Table II: per-operator median latency by backend")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Table V: online latency + tool-call distribution on a live query mix.
+
+The production study's system-side metrics, reproduced on the serving
+stack: 1,000 queries sampled from the question log (with paraphrase
+noise), full online path router → navigation → (oracle) generation.
+Reports Avg/P50/P95/P99 of wiki tool calls, wiki tool latency, and
+end-to-end latency, plus a 3-level quality proxy (3 = pack-exact,
+2 = partial shard coverage, 1 = no shard surfaced) standing in for the
+human rubric.
+"""
+from __future__ import annotations
+
+import random
+import time
+
+import numpy as np
+
+from common import build_wiki, emit
+
+from repro.core.cache import TieredCache
+from repro.core.navigate import Navigator, WallClockBudget
+from repro.core.oracle import HeuristicOracle
+from repro.data.corpus import score_answer
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.asarray(xs), p))
+
+
+def run(seed: int = 0, n_queries: int = 1000):
+    pipe, docs, questions = build_wiki(n_docs=160, n_questions=100,
+                                       seed=seed)
+    cache = TieredCache(pipe.store, bus=pipe.bus)
+    cache.prewarm()
+    nav = Navigator(pipe.store, HeuristicOracle(), cache=cache)
+    oracle = HeuristicOracle()
+    rng = random.Random(seed)
+    tool_calls, tool_lat, e2e_lat, quality = [], [], [], []
+    for i in range(n_queries):
+        q = questions[rng.randrange(len(questions))]
+        text = q.text if i % 3 else ("tell me, " + q.text.lower())
+        t0 = time.perf_counter()
+        results, trace = nav.nav(text, WallClockBudget(50.0))
+        t1 = time.perf_counter()
+        answer = oracle.answer(text, [r.text for r in results])
+        t2 = time.perf_counter()
+        tool_calls.append(trace.tool_calls)
+        tool_lat.append((t1 - t0) * 1000)
+        e2e_lat.append((t2 - t0) * 1000)
+        if score_answer(answer, q) == 1.0:
+            quality.append(3)
+        elif any(s.lower() in answer.lower() for s in q.answer_shards):
+            quality.append(2)
+        else:
+            quality.append(1)
+    rows = []
+    for name, xs, unit in (("tool_calls", tool_calls, "count"),
+                           ("tool_latency", tool_lat, "ms"),
+                           ("e2e_latency", e2e_lat, "ms")):
+        rows.append((f"table5_{name}_avg", round(float(np.mean(xs)), 3), unit))
+        for p in (50, 95, 99):
+            rows.append((f"table5_{name}_p{p}", round(_pct(xs, p), 3), unit))
+    rows.append(("table5_quality_mean", round(float(np.mean(quality)), 3),
+                 "rating_1_3"))
+    rows.append(("table5_cache_hit_rate", round(cache.stats.hit_rate(), 3),
+                 "fraction"))
+    emit(rows, header="Table V: online latency + quality on 1000 queries")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

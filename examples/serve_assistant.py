@@ -1,0 +1,76 @@
+"""Serving example: the WeChat-assistant pattern — per-author wikis +
+continuous-batching LM serving over WikiKV.
+
+    PYTHONPATH=src python examples/serve_assistant.py
+
+Builds TWO author wikis (disjoint subtrees — the §IV-C parallel
+construction model), freezes one into the device-resident tensor index,
+then serves a mixed query batch through the engine (NAV retrieval → LM
+decode), printing per-request traces and the batched device-lookup demo.
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config
+from repro.core import tensorstore as TS
+from repro.core.cache import TieredCache
+from repro.core.oracle import HeuristicOracle
+from repro.core.pipeline import build_author_wikis, PipelineConfig
+from repro.data.corpus import AuthTraceConfig, generate_authtrace, score_answer
+from repro.data.tokenizer import HashTokenizer
+from repro.models import model as M
+from repro.runtime.serving import Request, ServingEngine
+
+
+def main():
+    print("=== per-author parallel construction (disjoint subtrees) ===")
+    corpora, questions = {}, {}
+    for author in ("lu_xun", "qian_zhongshu"):
+        docs, qs = generate_authtrace(
+            AuthTraceConfig(n_docs=60, n_questions=16, seed=hash(author) % 97,
+                            author=author))
+        corpora[author] = docs
+        questions[author] = qs
+    wikis = build_author_wikis(corpora, HeuristicOracle, PipelineConfig())
+    for author, pipe in wikis.items():
+        print(f"  {author}: {pipe.store.count()} KV pairs")
+
+    print("\n=== tensorized index (TPU-native batched GET) ===")
+    pipe = wikis["lu_xun"]
+    wiki = TS.freeze(pipe.store)
+    t0 = time.perf_counter()
+    rows = TS.batched_get(wiki, wiki.paths)   # the whole namespace at once
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"  {wiki.n} lookups in one launch: {dt:.0f} us "
+          f"({dt/wiki.n:.2f} us/query), all hits: {all(r >= 0 for r in rows)}")
+
+    print("\n=== continuous-batching serving ===")
+    cfg = get_config("wikikv-router").reduced(d_model=64, vocab=2048)
+    texts = [pipe.store.get(p).text for p in pipe.store.all_paths()
+             if hasattr(pipe.store.get(p), "text")]
+    tok = HashTokenizer(vocab_size=cfg.vocab).fit(texts[:80])
+    params = M.init_params(cfg, seed=0)
+    cache = TieredCache(pipe.store, bus=pipe.bus)
+    cache.prewarm()
+    engine = ServingEngine(cfg, params, tok, pipe.store, HeuristicOracle(),
+                           cache=cache, batch_size=2, max_len=192)
+    reqs = [Request(rid=q.qid, query=q.text, max_new_tokens=6)
+            for q in questions["lu_xun"][:4]]
+    done = engine.run(reqs)
+    qmap = {q.qid: q for q in questions["lu_xun"]}
+    correct = 0
+    for r in done:
+        ok = score_answer(r.answer, qmap[r.rid])
+        correct += ok
+        print(f"  [{r.rid}] fan_in={qmap[r.rid].fan_in} "
+              f"tools={r.trace.tool_calls} pages={r.trace.pages_read} "
+              f"AC={'✓' if ok else '✗'}")
+    print(f"answered {correct}/{len(done)} exactly; "
+          f"cache hit-rate {cache.stats.hit_rate():.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""WikiKV core: the paper's contribution as a composable library.
+
+Import graph (bottom-up): paths → records → store → {backends, consistency,
+cache, schema} → {coldstart, evolution, errorbook} → pipeline → navigate;
+tensorstore is the device-resident (JAX) realization of the same contracts.
+"""
+from . import paths, records  # noqa: F401
+from .store import DictKV, KVEngine, MemKV, PathStore  # noqa: F401
+from .consistency import (CASConflict, ConsistentReader, Invalidation,  # noqa: F401
+                          InvalidationBus, WikiWriter)
+from .cache import TieredCache  # noqa: F401
+from .schema import SchemaParams, schema_cost, structure_counts  # noqa: F401
+from .oracle import HeuristicOracle, Oracle  # noqa: F401
+from .coldstart import cold_start, ingestion_filter  # noqa: F401
+from .evolution import AccessLog, CoAccessSketch, evolution_pass  # noqa: F401
+from .errorbook import ErrorBook, run_errorbook  # noqa: F401
+from .pipeline import ConstructionPipeline, PipelineConfig  # noqa: F401
+from .navigate import (Navigator, NavResult, NavTrace, UnitBudget,  # noqa: F401
+                       WallClockBudget, check_progressive)

@@ -1,0 +1,288 @@
+"""Budgeted path navigation NAV(q, B) (paper §V, Algorithm 1).
+
+Two-phase, search-accelerated plan:
+  Phase 1 — CLASSIFY(q) routes enumeration queries straight to LS("/");
+            everything else runs SEARCH(EXTRACT(q)) over the path namespace
+            for k candidate paths (constant KV round trips, independent of
+            depth D).
+  Phase 2 — targeted GETs on candidates; NEEDSDEEPER triggers at most one
+            single-level LS expansion per candidate.
+
+Progressive-answer contract (Property 1): results are emitted in order of
+monotonically increasing granularity — r1 index summary, r2 dimension
+summary, then entity/source pages — so *any* prefix of the output is a
+valid (coarser) answer.  Budget guards run before every potentially
+expensive step; on exhaustion the accumulated prefix is returned as-is.
+
+Budgets are pluggable: ``WallClockBudget`` (production semantics, ms) or
+``UnitBudget`` (deterministic virtual costs for tests — DESIGN.md §3).
+
+Theorem 3 (step compression) is observable via ``NavTrace.llm_calls``:
+layer-by-layer navigation needs D oracle descents; here a single SEARCH
+replaces the first D−h levels, leaving h ∈ {0, 1} NEEDSDEEPER calls per
+single-target query (≤ k when q aggregates across k dimensions).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from . import paths as P
+from . import records as R
+from .cache import TieredCache
+from .oracle import (ROUTE_AGGREGATE, ROUTE_ENUMERATE, ROUTE_LOOKUP, Oracle)
+from .store import PathStore
+
+# result granularity levels, in emission order (Property 1)
+KIND_INDEX = "index_summary"
+KIND_DIMENSION = "dimension_summary"
+KIND_ENTITY = "entity_page"
+KIND_LISTING = "listing"
+KIND_SOURCE = "source"
+
+# paper §V-A: r1 = index level, r2 = dimension level, r3.. = entity OR
+# article level — one shared granularity bucket from r3 onward.
+_GRANULARITY = {KIND_INDEX: 0, KIND_DIMENSION: 1, KIND_ENTITY: 2,
+                KIND_LISTING: 2, KIND_SOURCE: 2}
+
+
+@dataclass
+class NavResult:
+    kind: str
+    path: str
+    text: str
+
+    @property
+    def granularity(self) -> int:
+        return _GRANULARITY[self.kind]
+
+
+@dataclass
+class NavTrace:
+    """Per-query accounting (Tables III/V/VI metrics)."""
+
+    tool_calls: int = 0     # GET/LS/SEARCH storage operations
+    pages_read: int = 0     # entity/source payloads read
+    llm_calls: int = 0      # oracle descents on the critical path
+    accessed: set[str] = field(default_factory=set)
+    budget_exhausted: bool = False
+    route: str = ""
+
+
+class Budget:
+    def charge(self, op: str) -> None:
+        raise NotImplementedError
+
+    def exhausted(self) -> bool:
+        raise NotImplementedError
+
+
+class WallClockBudget(Budget):
+    """B in milliseconds of wall-clock (production semantics)."""
+
+    def __init__(self, ms: float, clock: Callable[[], float] = time.monotonic):
+        self.t0 = clock()
+        self.ms = ms
+        self.clock = clock
+
+    def charge(self, op: str) -> None:
+        pass
+
+    def exhausted(self) -> bool:
+        return (self.clock() - self.t0) * 1000.0 >= self.ms
+
+
+class UnitBudget(Budget):
+    """Deterministic virtual-cost budget; op costs mirror the paper's
+    dominant-step analysis (LLM call ≫ storage round trip)."""
+
+    COSTS = {"get": 1, "ls": 1, "search": 2, "classify": 1, "llm": 25}
+
+    def __init__(self, units: int):
+        self.units = units
+        self.spent = 0
+
+    def charge(self, op: str) -> None:
+        self.spent += self.COSTS.get(op, 1)
+
+    def exhausted(self) -> bool:
+        return self.spent >= self.units
+
+
+class Navigator:
+    """NAV(q, B) over a PathStore (optionally through the tiered cache)."""
+
+    def __init__(self, store: PathStore, oracle: Oracle,
+                 cache: TieredCache | None = None, k: int = 3,
+                 theta: float = 0.34, search_routing: bool = True):
+        self.store = store
+        self.oracle = oracle
+        self.cache = cache
+        self.k = k
+        self.theta = theta
+        self.search_routing = search_routing
+
+    # -- storage primitives through the cache when present -----------------
+    def _get(self, path: str, trace: NavTrace, budget: Budget) -> Optional[R.Record]:
+        budget.charge("get")
+        trace.tool_calls += 1
+        trace.accessed.add(path)
+        rec = (self.cache.get(path) if self.cache is not None
+               else self.store.get(path))
+        return rec
+
+    def _ls(self, path: str, trace: NavTrace, budget: Budget):
+        budget.charge("ls")
+        trace.tool_calls += 1
+        trace.accessed.add(path)
+        if self.cache is not None:
+            return self.cache.ls(path)
+        return self.store.ls(path)
+
+    # ----------------------------------------------------------------------
+    def nav(self, q: str, budget: Budget) -> tuple[list[NavResult], NavTrace]:
+        trace = NavTrace()
+        R_out: list[NavResult] = []
+
+        budget.charge("classify")
+        cls = self.oracle.classify_query(q)
+        trace.route = cls
+
+        # r1: index-level summary — the coarsest valid answer, from L1.
+        root_ls = self._ls(P.ROOT, trace, budget)
+        if root_ls is not None:
+            rec, children = root_ls
+            dims = [P.basename(c) for c in children if not P.is_reserved(c)]
+            R_out.append(NavResult(
+                KIND_INDEX, P.ROOT,
+                f"the wiki contains {len(dims)} dimensions: " + ", ".join(dims)))
+
+        # enumeration queries: answered by the single directory listing
+        if cls == ROUTE_ENUMERATE:
+            return R_out, trace
+
+        # Phase 1: search-accelerated routing
+        if self.search_routing:
+            budget.charge("search")
+            trace.tool_calls += 1
+            keywords = self.oracle.extract_keywords(q)
+            candidates = self._search_candidates(keywords)
+        else:
+            # ablation: pure layer-by-layer navigation (w/o Search Routing)
+            candidates = self._layer_by_layer(q, trace, budget)
+
+        if budget.exhausted():
+            trace.budget_exhausted = True
+            return R_out, trace  # coarsest fallback prefix
+
+        # Phase 2: targeted navigation.
+        # r2 first: dimension summaries for all candidate dimensions, so the
+        # emission order stays monotone in granularity (Property 1).
+        chosen = candidates[: self.k if self.search_routing else None]
+        emitted_dims: set[str] = set()
+        for path in chosen:
+            segs = P.segments(path)
+            if not segs or P.is_reserved(path):
+                continue
+            dim = P.SEP + segs[0]
+            if dim in emitted_dims:
+                continue
+            emitted_dims.add(dim)
+            drec = self._get(dim, trace, budget)
+            if isinstance(drec, R.DirRecord):
+                R_out.append(NavResult(
+                    KIND_DIMENSION, dim,
+                    f"{P.basename(dim)} contains {len(drec.children())} "
+                    f"entries: " + ", ".join(drec.children()[:12])))
+        # r3 onward: entity/article pages
+        for path in chosen:
+            rec = self._get(path, trace, budget)
+            if rec is None:
+                continue  # skip-on-miss
+            # the candidate page itself
+            text = rec.text if isinstance(rec, R.FileRecord) else rec.summary
+            kind = KIND_SOURCE if P.is_prefix(P.SOURCES_PREFIX, path) else KIND_ENTITY
+            R_out.append(NavResult(kind, path, text))
+            trace.pages_read += 1
+            # linked sources: follow entity-page links to the hoisted subtree
+            if isinstance(rec, R.FileRecord):
+                for src in rec.meta.sources[:2]:
+                    if budget.exhausted():
+                        break
+                    srec = self._get(src, trace, budget)
+                    if isinstance(srec, R.FileRecord):
+                        R_out.append(NavResult(KIND_SOURCE, src, srec.text))
+                        trace.pages_read += 1
+            # NEEDSDEEPER: at most one single-level expansion
+            budget.charge("llm")
+            trace.llm_calls += 1
+            if self.oracle.needs_deeper(q, text, self.theta):
+                deeper = self._ls(path, trace, budget)
+                if deeper is not None:
+                    drec, kids = deeper
+                    R_out.append(NavResult(
+                        KIND_LISTING, path,
+                        "contains: " + ", ".join(P.basename(kp) for kp in kids)))
+                    for kp in kids[:2]:
+                        if budget.exhausted():
+                            break
+                        krec = self._get(kp, trace, budget)
+                        if isinstance(krec, R.FileRecord):
+                            R_out.append(NavResult(KIND_ENTITY, kp, krec.text))
+                            trace.pages_read += 1
+            if budget.exhausted():
+                trace.budget_exhausted = True
+                break
+        return R_out, trace
+
+    # ----------------------------------------------------------------------
+    def _search_candidates(self, keywords: list[str]) -> list[str]:
+        """SEARCH(EXTRACT(q)): keyword routing over the path namespace.
+        Scores paths by keyword hits; prefers deeper (more specific) pages."""
+        scores: dict[str, float] = {}
+        for kw in keywords:
+            for p in self.store.search_contains(kw, limit=64):
+                if P.is_prefix(P.META_PREFIX, p):
+                    continue
+                scores[p] = scores.get(p, 0.0) + 1.0 + 0.1 * P.depth(p)
+        ranked = sorted(scores.items(), key=lambda kv: (-kv[1], kv[0]))
+        return [p for p, _ in ranked[: self.k * 3]]
+
+    def _layer_by_layer(self, q: str, trace: NavTrace, budget: Budget) -> list[str]:
+        """Ablation path: descend one oracle call per level from the root
+        (the D-step plan Theorem 3 compresses away)."""
+        frontier = [P.ROOT]
+        found: list[str] = []
+        qk = set(self.oracle.extract_keywords(q))
+        while frontier and not budget.exhausted():
+            path = frontier.pop(0)
+            out = self._ls(path, trace, budget)
+            if out is None:
+                rec = self._get(path, trace, budget)
+                if rec is not None:
+                    found.append(path)
+                continue
+            _, children = out
+            # one LLM adjudication per level: pick children lexically
+            # overlapping the query
+            budget.charge("llm")
+            trace.llm_calls += 1
+            picked = [c for c in children
+                      if not P.is_reserved(c)
+                      and (set(P.basename(c).lower().split("_")) & qk
+                           or any(k in P.basename(c).lower() for k in qk))]
+            if not picked:
+                picked = [c for c in children if not P.is_reserved(c)][:2]
+            frontier.extend(picked[:3])
+            for c in picked:
+                if self.store.get(c) is not None and P.depth(c) >= 2:
+                    found.append(c)
+        return found
+
+
+def check_progressive(results: list[NavResult]) -> bool:
+    """Property 1: granularity is monotonically non-decreasing, so every
+    prefix is itself a usable (coarser) answer."""
+    levels = [r.granularity for r in results]
+    return all(a <= b for a, b in zip(levels, levels[1:]))

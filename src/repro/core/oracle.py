@@ -1,0 +1,244 @@
+"""LLM-oracle abstraction.
+
+Every LLM touchpoint in the paper flows through one interface so the whole
+pipeline runs (a) deterministically with the seeded ``HeuristicOracle``
+(tests/benches — replacing the paper's DeepSeek-V4-Flash, per DESIGN.md §3),
+or (b) with a real zoo LM via ``ModelOracle`` (repro/runtime/model_oracle.py).
+
+Touchpoints (paper → method):
+  IASI positioning 𝒫               → positioning(sample)
+  IASI scaffold induction          → induce_scaffold(sample, positioning, constraints)
+  ingestion entity assignment      → assign_entities(doc, scaffold)
+  PageSplit Architect adjudication → adjudicate_split(entity_text)
+  NAV CLASSIFY                     → classify_query(q)      (hybrid: regex + classifier)
+  NAV EXTRACT                      → extract_keywords(q)
+  NAV NEEDSDEEPER                  → needs_deeper(q, content)
+  summaries / final answer         → summarize(texts), answer(q, evidence)
+
+The HeuristicOracle is intentionally *lexical*: it has no private channel to
+ground truth.  Answer correctness in the benchmarks is therefore driven by
+whether the retrieval stage surfaced the right evidence — the same causal
+structure as the paper's evaluation.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from dataclasses import dataclass, field
+
+# NAV route classes (paper §V-B)
+ROUTE_ENUMERATE = "ENUMERATE"
+ROUTE_LOOKUP = "LOOKUP"
+ROUTE_AGGREGATE = "AGGREGATE"
+
+_ENUM_RE = re.compile(
+    r"^\s*(which|list|enumerate|what\s+are|show\s+all|how\s+many)\b", re.I)
+_AGG_RE = re.compile(r"\b(compare|both|relationship\s+between|and)\b", re.I)
+
+_STOP = frozenset(
+    "a an the of in on at to for with and or is are was were did does do what "
+    "who when where why how which his her their its about between".split())
+
+_TOKEN_RE = re.compile(r"[a-z0-9_]+")
+
+
+def tokens(text: str) -> list[str]:
+    return _TOKEN_RE.findall(text.lower())
+
+
+def content_tokens(text: str) -> list[str]:
+    return [t for t in tokens(text) if t not in _STOP and len(t) > 1]
+
+
+@dataclass
+class ScaffoldSpec:
+    """Directory scaffold T emitted by IASI: dimensions → entity seeds."""
+
+    dimensions: dict[str, list[str]] = field(default_factory=dict)
+    positioning: dict[str, str] = field(default_factory=dict)
+
+
+class Oracle:
+    """Abstract LLM oracle; all methods must be deterministic given state."""
+
+    calls: Counter
+
+    def __init__(self):
+        self.calls = Counter()
+
+    # --- schema construction ---
+    def positioning(self, sample: list[dict]) -> dict[str, str]:
+        raise NotImplementedError
+
+    def induce_scaffold(self, sample: list[dict], positioning: dict[str, str],
+                        *, k_max: int, depth_budget: int) -> ScaffoldSpec:
+        raise NotImplementedError
+
+    def assign_entities(self, doc: dict, scaffold: ScaffoldSpec) -> list[tuple[str, str]]:
+        raise NotImplementedError
+
+    def adjudicate_split(self, text: str) -> list[str] | None:
+        raise NotImplementedError
+
+    # --- navigation ---
+    def classify_query(self, q: str) -> str:
+        raise NotImplementedError
+
+    def extract_keywords(self, q: str) -> list[str]:
+        raise NotImplementedError
+
+    def needs_deeper(self, q: str, content: str, theta: float = 0.34) -> bool:
+        raise NotImplementedError
+
+    # --- generation ---
+    def summarize(self, texts: list[str], limit: int = 400) -> str:
+        raise NotImplementedError
+
+    def answer(self, q: str, evidence: list[str]) -> str:
+        raise NotImplementedError
+
+
+class HeuristicOracle(Oracle):
+    """Deterministic lexical oracle (the container's DeepSeek stand-in)."""
+
+    def __init__(self, seed: int = 0):
+        super().__init__()
+        self.seed = seed
+
+    # ------------------------------------------------------------------
+    def positioning(self, sample):
+        self.calls["positioning"] += 1
+        topics = Counter()
+        for doc in sample:
+            topics.update(doc.get("topics", []) or content_tokens(doc["text"])[:4])
+        focus = ", ".join(t for t, _ in topics.most_common(3))
+        return {
+            "focus": focus or "general",
+            "audience": "followers of the account",
+            "ingestion_bias": "author-curated articles, low-information filtered",
+        }
+
+    def induce_scaffold(self, sample, positioning, *, k_max, depth_budget):
+        """Intent-anchored: dimensions from the positioning focus topics
+        (not just whatever entity surfaces first), entities from per-topic
+        salient tokens.  Structural constraints enforced by construction.
+
+        Sample-size sensitivity (the §III-C mechanism the w/o-Cold-Start
+        ablation measures): a small curated sample keeps the schema
+        discriminating; injecting the *full* corpus inflates the prompt,
+        so incidental token overlaps surface as spurious over-specific
+        entities and the per-dimension entity lists balloon — modeled
+        here by letting the entity pool grow with the sample and by
+        admitting raw content-token 'entities' past the curated budget."""
+        self.calls["induce_scaffold"] += 1
+        dim_docs: dict[str, list[dict]] = {}
+        for doc in sample:
+            for topic in (doc.get("topics") or ["misc"]):
+                dim_docs.setdefault(topic, []).append(doc)
+        ranked = sorted(dim_docs.items(), key=lambda kv: (-len(kv[1]), kv[0]))
+        oversized = len(sample) > 48
+        ents_per_dim = 8 if not oversized else min(k_max, len(sample) // 4)
+        dims: dict[str, list[str]] = {}
+        for topic, docs in ranked[: max(2, min(k_max, len(ranked)))]:
+            ents = Counter()
+            for d in docs:
+                ents.update(d.get("entities", []) or content_tokens(d["text"])[:3])
+                if oversized:
+                    # incidental-overlap noise: frequent content tokens
+                    # masquerade as entities in an over-fed induction
+                    ents.update(t for t in content_tokens(d["text"])[4:8])
+            dims[topic] = [e for e, _ in ents.most_common(ents_per_dim)]
+        return ScaffoldSpec(dimensions=dims, positioning=dict(positioning))
+
+    def assign_entities(self, doc, scaffold):
+        self.calls["assign_entities"] += 1
+        out: list[tuple[str, str]] = []
+        doc_topics = set(doc.get("topics", []))
+        doc_ents = set(doc.get("entities", []))
+        for dim, ents in scaffold.dimensions.items():
+            if doc_topics and dim not in doc_topics and dim != "misc":
+                continue
+            for e in ents:
+                if not doc_ents or e in doc_ents:
+                    out.append((dim, e))
+        if not out:
+            # fall back to the first dimension + a salient token entity
+            dim = next(iter(scaffold.dimensions), "misc")
+            ent = (doc.get("entities") or content_tokens(doc["text"])[:1] or ["misc"])[0]
+            out.append((dim, ent))
+        # dedupe, stable order
+        seen, uniq = set(), []
+        for pair in out:
+            if pair not in seen:
+                seen.add(pair)
+                uniq.append(pair)
+        return uniq
+
+    def adjudicate_split(self, text):
+        """Separable-subtree adjudication: a page whose paragraphs cluster
+        around ≥2 distinct head tokens admits a split along those heads."""
+        self.calls["adjudicate_split"] += 1
+        paras = [p for p in text.split("\n\n") if p.strip()]
+        if len(paras) < 2:
+            return None
+        heads = []
+        for p in paras:
+            ct = content_tokens(p)
+            if ct:
+                heads.append(ct[0])
+        distinct = sorted(set(heads))
+        if len(distinct) >= 2:
+            return distinct[:4]
+        return None
+
+    # ------------------------------------------------------------------
+    def classify_query(self, q):
+        """Hybrid router: regex layer for enumeration triggers, token
+        heuristic (the distilled classifier's stand-in) for the rest."""
+        self.calls["classify_query"] += 1
+        if _ENUM_RE.search(q):
+            return ROUTE_ENUMERATE
+        if _AGG_RE.search(q):
+            return ROUTE_AGGREGATE
+        return ROUTE_LOOKUP
+
+    def extract_keywords(self, q):
+        self.calls["extract_keywords"] += 1
+        ct = content_tokens(q)
+        # rank by rarity proxy: longer tokens first, stable tie-break
+        return sorted(set(ct), key=lambda t: (-len(t), t))[:6]
+
+    def needs_deeper(self, q, content, theta=0.34):
+        """Semantic-coverage threshold test (paper: lightweight classifier
+        or one LLM call).  Coverage = fraction of query content tokens
+        present in the candidate content."""
+        self.calls["needs_deeper"] += 1
+        qt = set(content_tokens(q))
+        if not qt:
+            return False
+        cov = len(qt & set(tokens(content))) / len(qt)
+        return cov < theta
+
+    # ------------------------------------------------------------------
+    def summarize(self, texts, limit=400):
+        self.calls["summarize"] += 1
+        joined = " ".join(t.strip() for t in texts if t.strip())
+        return joined[:limit]
+
+    def answer(self, q, evidence):
+        """Evidence-bounded answering: emit the evidence sentences that
+        cover the query tokens.  No access to anything outside `evidence`,
+        so retrieval quality is the only driver of correctness."""
+        self.calls["answer"] += 1
+        qt = set(content_tokens(q))
+        scored: list[tuple[float, str]] = []
+        for ev in evidence:
+            for sent in re.split(r"(?<=[.!?])\s+", ev):
+                st = set(content_tokens(sent))
+                if not st:
+                    continue
+                overlap = len(qt & st) / max(len(qt), 1)
+                if overlap > 0:
+                    scored.append((-overlap, sent.strip()))
+        scored.sort(key=lambda x: (x[0], x[1]))
+        return " ".join(s for _, s in scored[:6])

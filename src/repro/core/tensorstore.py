@@ -1,0 +1,258 @@
+"""Device-resident tensorized path index — the TPU-native WikiKV core.
+
+The paper's LevelDB point lookup becomes a *batched* device operation: the
+whole online navigation tier resolves thousands of concurrent GET/LS/SEARCH
+operations in one kernel launch (DESIGN.md §3).
+
+Layout (frozen from a PathStore snapshot by the offline pipeline):
+
+  keys_hi, keys_lo : (N,) uint32 pairs — the sorted 64-bit FNV digests
+                     H(π) (sorted by (hi, lo), so binary search works on
+                     the pair lexicographically).
+  path_tokens      : (N, L) uint8 — normalized path bytes, zero-padded,
+                     *sorted lexicographically* in a separate permutation
+                     ``lex_order`` for prefix range scans.
+  kinds            : (N,) int8   — 0 dir, 1 file.
+  access/depth     : (N,) int32  — co-located meta for evolution operators.
+  child_index      : CSR (N+1,) offsets into ``child_rows`` (int32 row ids)
+                     — the "children co-located with the parent" contract:
+                     LS(π) = one lookup + one CSR slice, no scan.
+
+Query ops (pure-jnp reference here; ``kernels.path_lookup`` /
+``kernels.prefix_search`` are the Pallas hot paths — ops.py dispatches):
+
+  lookup(digests)       → row ids (−1 for miss)        [Q1, batched]
+  ls_rows(row)          → child row ids                [Q2]
+  prefix_search(prefix) → match bitmap over paths      [Q4, batched]
+
+The L1 cache tier maps to the ``pinned`` row set: rows for "/" and every
+"/d" are known at freeze time and stay resident (first rows of the table);
+this is metadata (the whole table is device-resident anyway) but the
+pinned prefix determines what the serving engine keeps in VMEM across
+steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import paths as P
+from . import records as R
+from .store import PathStore
+
+MAX_PATH_BYTES = 96
+
+
+def _digest_pair(path: str) -> tuple[int, int]:
+    h = P.path_hash(path)
+    return (h >> 32) & 0xFFFFFFFF, h & 0xFFFFFFFF
+
+
+def pack_path(path: str, width: int = MAX_PATH_BYTES) -> np.ndarray:
+    b = path.encode("utf-8")[:width]
+    out = np.zeros((width,), dtype=np.uint8)
+    out[: len(b)] = np.frombuffer(b, dtype=np.uint8)
+    return out
+
+
+@dataclass
+class TensorWiki:
+    """Frozen, device-resident wiki index."""
+
+    keys_hi: jax.Array          # (N,) uint32, sorted with keys_lo
+    keys_lo: jax.Array          # (N,) uint32
+    path_tokens: jax.Array      # (N, L) uint8 in hash-sorted row order
+    lex_order: jax.Array        # (N,) int32 — rows in lexicographic path order
+    lex_tokens: jax.Array       # (N, L) uint8 in lexicographic order
+    kinds: jax.Array            # (N,) int8
+    access: jax.Array           # (N,) int32
+    depths: jax.Array           # (N,) int8
+    child_offsets: jax.Array    # (N+1,) int32 CSR
+    child_rows: jax.Array       # (E,) int32
+    n_pinned: int               # rows 0..n_pinned-1 of lex order = "/" + dims
+    paths: list[str]            # host-side row id -> logical path (debug/decode)
+
+    @property
+    def n(self) -> int:
+        return int(self.keys_hi.shape[0])
+
+
+def freeze(store: PathStore, max_path_bytes: int = MAX_PATH_BYTES) -> TensorWiki:
+    """Snapshot a PathStore into the device-resident layout.
+
+    Runs in the offline pipeline; the online tier swaps the frozen table
+    atomically (the tensor-level analogue of the invalidation protocol —
+    bounded staleness Δ = refresh cadence)."""
+    all_paths = sorted(store.all_paths())
+    n = len(all_paths)
+    if n == 0:
+        raise ValueError("empty store")
+    digests = np.zeros((n, 2), dtype=np.uint64)
+    toks = np.zeros((n, max_path_bytes), dtype=np.uint8)
+    kinds = np.zeros((n,), dtype=np.int8)
+    access = np.zeros((n,), dtype=np.int32)
+    depths = np.zeros((n,), dtype=np.int8)
+    recs: list[R.Record | None] = []
+    for i, p in enumerate(all_paths):
+        hi, lo = _digest_pair(p)
+        digests[i] = (hi, lo)
+        toks[i] = pack_path(p, max_path_bytes)
+        rec = store.get(p)
+        recs.append(rec)
+        kinds[i] = 0 if isinstance(rec, R.DirRecord) else 1
+        access[i] = 0 if rec is None else rec.meta.access_count
+        depths[i] = P.depth(p)
+    # sort rows by (hi, lo)
+    order = np.lexsort((digests[:, 1], digests[:, 0]))
+    digests = digests[order]
+    toks_h = toks[order]
+    kinds = kinds[order]
+    access = access[order]
+    depths = depths[order]
+    sorted_paths = [all_paths[i] for i in order]
+    row_of = {p: i for i, p in enumerate(sorted_paths)}
+    # children CSR
+    offsets = np.zeros((n + 1,), dtype=np.int32)
+    rows: list[int] = []
+    for i, p in enumerate(sorted_paths):
+        rec = store.get(p)
+        kids: list[int] = []
+        if isinstance(rec, R.DirRecord):
+            for seg in rec.children():
+                cp = P.child(p, seg)
+                ci = row_of.get(cp)
+                if ci is not None:
+                    kids.append(ci)
+        rows.extend(kids)
+        offsets[i + 1] = len(rows)
+    # lexicographic permutation over the *original sorted path list*
+    lex_paths = sorted_paths  # row order is hash order; build lex view
+    lex_perm = np.array(
+        sorted(range(n), key=lambda i: lex_paths[i]), dtype=np.int32)
+    lex_toks = toks_h[lex_perm]
+    # pinned prefix: "/" + dimensions first in lex order (they sort early
+    # because "/" < "/d/..." at equal prefixes — compute exactly)
+    pinned = sum(1 for p in sorted(lex_paths) if P.depth(p) <= 1)
+    return TensorWiki(
+        keys_hi=jnp.asarray(digests[:, 0].astype(np.uint32)),
+        keys_lo=jnp.asarray(digests[:, 1].astype(np.uint32)),
+        path_tokens=jnp.asarray(toks_h),
+        lex_order=jnp.asarray(lex_perm),
+        lex_tokens=jnp.asarray(lex_toks),
+        kinds=jnp.asarray(kinds),
+        access=jnp.asarray(access),
+        depths=jnp.asarray(depths),
+        child_offsets=jnp.asarray(offsets),
+        child_rows=jnp.asarray(np.asarray(rows, dtype=np.int32)),
+        n_pinned=int(pinned),
+        paths=sorted_paths,
+    )
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp reference ops (the Pallas kernels' oracles; ops.py dispatches to
+# the kernels when the shapes warrant it)
+# ---------------------------------------------------------------------------
+@jax.jit
+def lookup_ref(keys_hi: jax.Array, keys_lo: jax.Array,
+               q_hi: jax.Array, q_lo: jax.Array) -> jax.Array:
+    """Batched GET: vectorized binary search on sorted (hi, lo) uint32
+    pairs, compared lexicographically.  Deliberately x64-free (TPUs have
+    no native int64 either) — the same pair-comparison loop the Pallas
+    kernel runs, ⌈log2 N⌉+1 steps for the whole query batch at once."""
+    n = keys_hi.shape[0]
+    lo = jnp.zeros(q_hi.shape, dtype=jnp.int32)
+    hi = jnp.full(q_hi.shape, n, dtype=jnp.int32)
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) // 2
+        mid_c = jnp.clip(mid, 0, n - 1)
+        khi = keys_hi[mid_c]
+        klo = keys_lo[mid_c]
+        lt = (khi < q_hi) | ((khi == q_hi) & (klo < q_lo))
+        return (jnp.where(lt, mid + 1, lo), jnp.where(lt, hi, mid))
+
+    steps = int(np.ceil(np.log2(max(int(n), 2)))) + 1
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    idx = jnp.clip(lo, 0, n - 1)
+    hit = (keys_hi[idx] == q_hi) & (keys_lo[idx] == q_lo)
+    return jnp.where(hit, idx, -1)
+
+
+def batched_get(wiki: TensorWiki, query_paths: list[str]) -> np.ndarray:
+    """Host convenience wrapper: paths → digests → device lookup → row ids."""
+    q = np.array([_digest_pair(p) for p in query_paths], dtype=np.uint64)
+    rows = lookup_ref(wiki.keys_hi, wiki.keys_lo,
+                      jnp.asarray(q[:, 0].astype(np.uint32)),
+                      jnp.asarray(q[:, 1].astype(np.uint32)))
+    return np.asarray(rows)
+
+
+@jax.jit
+def prefix_match_ref(lex_tokens: jax.Array, prefix: jax.Array,
+                     prefix_len: jax.Array) -> jax.Array:
+    """Batched SEARCH: bitmap of rows whose path starts with ``prefix``.
+
+    lex_tokens: (N, L) uint8; prefix: (L,) uint8; prefix_len: scalar int32.
+    Segment-awareness (``/a`` must not match ``/ab``) is enforced by
+    requiring the byte *after* the prefix to be 0 (end) or '/' when the
+    prefix does not itself end in '/'."""
+    L = lex_tokens.shape[1]
+    pos = jnp.arange(L, dtype=jnp.int32)
+    within = pos < prefix_len
+    eq = (lex_tokens == prefix[None, :]) | ~within[None, :]
+    starts = jnp.all(eq, axis=1)
+    nxt = lex_tokens[:, jnp.minimum(prefix_len, L - 1)]
+    last = prefix[jnp.maximum(prefix_len - 1, 0)]
+    boundary_ok = (last == ord("/")) | (nxt == 0) | (nxt == ord("/"))
+    exact_fits = prefix_len < L
+    return starts & jnp.where(exact_fits, boundary_ok, True)
+
+
+def search_prefix(wiki: TensorWiki, prefix: str) -> list[str]:
+    p = pack_path(prefix, int(wiki.lex_tokens.shape[1]))
+    bitmap = prefix_match_ref(
+        wiki.lex_tokens, jnp.asarray(p),
+        jnp.int32(len(prefix.encode("utf-8"))))
+    hits = np.nonzero(np.asarray(bitmap))[0]
+    lex = np.asarray(wiki.lex_order)
+    return [wiki.paths[lex[i]] for i in hits]
+
+
+@jax.jit
+def contains_match_ref(lex_tokens: jax.Array, needle: jax.Array,
+                       needle_len: jax.Array) -> jax.Array:
+    """Keyword containment over paths (NAV's EXTRACT routing): sliding
+    window equality, vectorized over all rows and offsets."""
+    N, L = lex_tokens.shape
+    K = needle.shape[0]
+    # windows: (N, L, K) via gather of shifted positions
+    pos = jnp.arange(L, dtype=jnp.int32)[:, None] + jnp.arange(K, dtype=jnp.int32)[None, :]
+    pos = jnp.minimum(pos, L - 1)
+    windows = lex_tokens[:, pos]            # (N, L, K)
+    within = jnp.arange(K, dtype=jnp.int32)[None, None, :] < needle_len
+    eq = (windows == needle[None, None, :]) | ~within
+    match_at = jnp.all(eq, axis=2)          # (N, L)
+    valid_start = (jnp.arange(L, dtype=jnp.int32)[None, :]
+                   + needle_len <= L)
+    return jnp.any(match_at & valid_start, axis=1)
+
+
+def ls_rows(wiki: TensorWiki, row: int) -> np.ndarray:
+    off = np.asarray(wiki.child_offsets)
+    lo, hi = int(off[row]), int(off[row + 1])
+    return np.asarray(wiki.child_rows[lo:hi])
+
+
+def navigate_rows(wiki: TensorWiki, path: str) -> np.ndarray:
+    """Q3 over the tensor index: one batched lookup resolves the whole
+    ancestor chain at once — the step-compression idea applied to the
+    storage layer itself (all D levels in one kernel launch)."""
+    chain = list(P.ancestors(path)) + [path]
+    return batched_get(wiki, chain)

@@ -1,0 +1,3 @@
+from .corpus import AuthTraceConfig, generate_authtrace  # noqa: F401
+from .tokenizer import HashTokenizer  # noqa: F401
+from .pipeline import DataPipeline, PipelineState  # noqa: F401

@@ -1,0 +1,1 @@
+from .pipeline import PipelineSchedule, pipeline_apply  # noqa: F401

@@ -1,0 +1,114 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+Public entry points used by models/ and core/tensorstore.  Each op
+dispatches to the Pallas kernel when the platform + shape warrant it and
+to the pure-jnp reference otherwise:
+
+  * On TPU (the target), kernels run compiled (``interpret=False``).
+  * On CPU (this container), kernels run in interpret mode only inside
+    the test suite; production paths (model forward, dry-run lowering)
+    use the references so that XLA sees fusible HLO — interpret-mode
+    pallas inside a 256-device SPMD lowering would be both meaningless
+    and slow.  Set ``REPRO_FORCE_PALLAS=1`` to force kernels everywhere.
+
+The dispatch decision is deliberately centralized here so the hillclimb
+loop can flip implementations per-op and re-lower.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from . import ref
+from .decode_attention import decode_attention as _decode_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .moe_router import moe_router as _router_pallas
+from .path_lookup import pad_keys, path_lookup as _lookup_pallas
+from .prefix_search import prefix_search as _prefix_pallas
+from .rmsnorm import rmsnorm as _rmsnorm_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:  # pragma: no cover - uninitialized backend
+        return False
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    if os.environ.get("REPRO_DISABLE_PALLAS") == "1":
+        return False
+    return _on_tpu()
+
+
+# ---------------------------------------------------------------------------
+def attention(q, k, v, *, causal: bool = True, sm_scale: float | None = None,
+              block_q: int = 128, block_k: int = 128):
+    """(B, Hq, Sq, D) × (B, Hkv, Skv, D)² → (B, Hq, Sq, D)."""
+    if _use_pallas():
+        return _flash_pallas(q, k, v, causal=causal, sm_scale=sm_scale,
+                             block_q=block_q, block_k=block_k,
+                             interpret=not _on_tpu())
+    skv = k.shape[2]
+    if skv > 1024 and skv % 1024 == 0:
+        # chunked online-softmax path: O(Sq·chunk) peak memory — the form
+        # the dry-run lowers so 32k prefill fits HBM
+        return ref.chunked_attention_ref(q, k, v, causal=causal,
+                                         sm_scale=sm_scale, chunk=1024)
+    return ref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     sm_scale: float | None = None, block_k: int = 256):
+    """(B, Hq, D) × (B, Hkv, S, D)² × (B,) → (B, Hq, D)."""
+    if _use_pallas():
+        return _decode_pallas(q, k_cache, v_cache, lengths,
+                              sm_scale=sm_scale, block_k=block_k,
+                              interpret=not _on_tpu())
+    return ref.decode_attention_ref(q, k_cache, v_cache, lengths,
+                                    sm_scale=sm_scale)
+
+
+def moe_router(logits, k: int, *, renormalize: bool = True,
+               block_t: int = 256):
+    """(T, E) → (weights (T,k) f32, indices (T,k) i32)."""
+    if _use_pallas():
+        return _router_pallas(logits, k, renormalize=renormalize,
+                              block_t=block_t, interpret=not _on_tpu())
+    return ref.moe_router_ref(logits, k, renormalize=renormalize)
+
+
+def rmsnorm(x, scale=None, eps: float = 1e-6, block_t: int = 256):
+    if _use_pallas():
+        return _rmsnorm_pallas(x, scale, eps=eps, block_t=block_t,
+                               interpret=not _on_tpu())
+    return ref.rmsnorm_ref(x, scale, eps=eps)
+
+
+def path_lookup(keys_hi, keys_lo, q_hi, q_lo, *, block_q: int = 256):
+    """Sorted-table batched GET.  Keys must be pre-padded via pad_keys for
+    the kernel path; the reference accepts any length."""
+    if _use_pallas() and keys_hi.shape[0] % 128 == 0:
+        return _lookup_pallas(keys_hi, keys_lo, q_hi, q_lo,
+                              block_q=block_q, interpret=not _on_tpu())
+    return ref.path_lookup_ref(keys_hi, keys_lo, q_hi, q_lo)
+
+
+def prefix_search(tokens, prefixes, prefix_lens, *, block_n: int = 1024):
+    """(N, L) × (Q, L) → (N, Q) bitmap."""
+    if _use_pallas():
+        return _prefix_pallas(tokens, prefixes, prefix_lens,
+                              block_n=block_n, interpret=not _on_tpu())
+    # reference handles one prefix at a time
+    import jax.numpy as jnp
+    cols = [ref.prefix_search_ref(tokens, prefixes[i], prefix_lens[i])
+            for i in range(prefixes.shape[0])]
+    return jnp.stack(cols, axis=1)
+
+
+__all__ = ["attention", "decode_attention", "moe_router", "rmsnorm",
+           "path_lookup", "prefix_search", "pad_keys"]

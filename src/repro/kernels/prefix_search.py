@@ -1,0 +1,77 @@
+"""Batched prefix search (the paper's Q4/SEARCH, TPU-native) — Pallas kernel.
+
+SEARCH(p) over the packed path-token matrix: a pure streaming op — each
+grid step pulls one (block_n, L) uint8 tile of paths into VMEM, compares
+it against the query prefix (broadcast across rows), applies the segment-
+boundary rule ("/a" must not match "/ab"), and emits a (block_n,) bitmap.
+
+This is the bandwidth-roofline member of the kernel set: arithmetic
+intensity ≈ 1 compare/byte, so the dry-run's memory term is the honest
+cost model.  The LSM iterator of the paper becomes a dense scan that the
+VPU eats at HBM speed; for N = 10⁷ paths × 96 B ≈ 1 GB, one pass is
+~1.2 ms at 819 GB/s — amortized across every query in the routing batch,
+since the tile is compared against *all* pending prefixes while resident
+(the multi-query variant below).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _prefix_kernel(tok_ref, pref_ref, plen_ref, out_ref):
+    """Refs: tokens (block_n, L) uint8; prefix (Q, L) uint8; plen (Q,) i32;
+    out (block_n, Q) bool."""
+    toks = tok_ref[...]
+    prefs = pref_ref[...]
+    plens = plen_ref[...]
+    L = toks.shape[1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, prefs.shape, 1)  # (Q, L)
+    within = pos < plens[:, None]
+    # (block_n, Q, L) compare — block_n×Q×L uint8 ops in VMEM
+    eq = (toks[:, None, :] == prefs[None, :, :]) | ~within[None, :, :]
+    starts = jnp.all(eq, axis=2)                               # (block_n, Q)
+    # segment boundary: byte after the prefix must be 0 or '/'
+    # (unless the prefix itself ends in '/')
+    plen_c = jnp.minimum(plens, L - 1)
+    nxt = jnp.take_along_axis(
+        jnp.broadcast_to(toks[:, None, :], (toks.shape[0], prefs.shape[0], L)),
+        plen_c[None, :, None].astype(jnp.int32), axis=2)[..., 0]
+    last = jnp.take_along_axis(
+        prefs, jnp.maximum(plens - 1, 0)[:, None].astype(jnp.int32),
+        axis=1)[:, 0]
+    boundary_ok = (last[None, :] == ord("/")) | (nxt == 0) | (nxt == ord("/"))
+    fits = (plens < L)[None, :]
+    out_ref[...] = starts & jnp.where(fits, boundary_ok, True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def prefix_search(tokens: jax.Array, prefixes: jax.Array,
+                  prefix_lens: jax.Array, *, block_n: int = 1024,
+                  interpret: bool = True) -> jax.Array:
+    """tokens: (N, L) uint8; prefixes: (Q, L) uint8; prefix_lens: (Q,) int32.
+    Returns (N, Q) bool match bitmap.  N padded to block_n internally."""
+    N, L = tokens.shape
+    Q = prefixes.shape[0]
+    bn = min(block_n, N)
+    if N % bn != 0:
+        pad = bn - N % bn
+        tokens = jnp.concatenate(
+            [tokens, jnp.full((pad, L), 255, jnp.uint8)], axis=0)
+    Np = tokens.shape[0]
+    out = pl.pallas_call(
+        _prefix_kernel,
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, L), lambda nb: (nb, 0)),
+            pl.BlockSpec((Q, L), lambda nb: (0, 0)),
+            pl.BlockSpec((Q,), lambda nb: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, Q), lambda nb: (nb, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, Q), jnp.bool_),
+        interpret=interpret,
+    )(tokens, prefixes, prefix_lens)
+    return out[:N]

@@ -1,0 +1,74 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch wikikv-router \
+        --steps 200 --batch 8 --seq 128
+
+On this container it trains reduced/CPU-sized configs for real (the
+examples use it); on a TPU pod the same entry point takes
+``--mesh single|multi`` and the production mesh + shardings from
+launch/mesh.py — the code path is identical, only the mesh differs.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data.corpus import AuthTraceConfig, generate_authtrace
+from repro.data.pipeline import DataPipeline
+from repro.data.tokenizer import HashTokenizer
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
+
+
+def build_pipeline(vocab: int, seq_len: int, global_batch: int,
+                   seed: int = 0):
+    docs, _ = generate_authtrace(AuthTraceConfig(n_docs=200, seed=seed))
+    tok = HashTokenizer(vocab_size=vocab).fit([d["text"] for d in docs])
+    token_docs = [tok.encode(d["text"]) for d in docs]
+    return DataPipeline(token_docs, seq_len=seq_len,
+                        global_batch=global_batch, seed=seed), tok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="wikikv-router")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (CPU-sized) config")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--checkpoint-dir", default="checkpoints/train")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--opt-dtype", default="float32")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    pipeline, _ = build_pipeline(cfg.vocab, args.seq, args.batch)
+    loop = TrainLoop(
+        cfg,
+        AdamWConfig(lr=3e-4, state_dtype=args.opt_dtype),
+        TrainLoopConfig(total_steps=args.steps,
+                        checkpoint_every=args.checkpoint_every,
+                        checkpoint_dir=args.checkpoint_dir),
+        pipeline, mesh=mesh)
+    with mesh:
+        metrics = loop.run()
+    print(f"final loss {metrics.losses[-1]:.4f} "
+          f"(first {metrics.losses[0]:.4f}) over {len(metrics.losses)} steps")
+    return metrics
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .config import ModelConfig, MoEConfig  # noqa: F401
+from .model import (SHAPES, ShapeSpec, abstract_params, init_params,  # noqa: F401
+                    input_specs, make_eval_step, make_prefill_step,
+                    make_serve_step, make_train_step, model_flops,
+                    param_shardings, spec_tree)
+from . import transformer  # noqa: F401

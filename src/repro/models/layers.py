@@ -1,0 +1,198 @@
+"""Shared layers: norms, RoPE, GQA attention (+KV cache), gated MLP.
+
+Everything is functional: params are plain dict pytrees, apply functions
+are pure.  Initializers return (params, pspecs) pairs built in lockstep so
+the sharding tree always matches the param tree (the dry-run lowers from
+``jax.eval_shape`` over these initializers — no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..kernels import ops
+from .config import ModelConfig
+
+# logical → mesh axes used by every pspec below:
+#   "data"  : FSDP parameter shard axis (all-gather on use)
+#   "model" : tensor-parallel axis
+FSDP = "data"
+TP = "model"
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, cfg: ModelConfig,
+               shard: tuple | None = None, scale: float | None = None):
+    """(d_in, d_out) matrix; default fan-in init."""
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(_dtype(cfg))
+    spec = P(*shard) if shard is not None else P(None, None)
+    return w, spec
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def norm_init(cfg: ModelConfig):
+    if cfg.nonparam_ln:
+        return {}, {}
+    return ({"scale": jnp.ones((cfg.d_model,), _dtype(cfg))},
+            {"scale": P(None)})
+
+
+def norm_apply(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.nonparam_ln:
+        # OLMo non-parametric LN: center + normalize, no affine
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        return ((xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype)
+    return ops.rmsnorm(x, params["scale"], eps=cfg.norm_eps)
+
+
+def head_norm_apply(scale: jax.Array | None, x: jax.Array,
+                    eps: float) -> jax.Array:
+    """qk-norm: RMS over the head dim (last axis)."""
+    return ops.rmsnorm(x, scale, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(cfg: ModelConfig) -> jax.Array:
+    d = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    return inv  # (d/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array) -> jax.Array:
+    """x: (..., S, D); positions: broadcastable to (..., S)."""
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA + optional qk-norm) with KV-cache support
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    H, KV, Dh, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    params, specs = {}, {}
+    params["wq"], specs["wq"] = dense_init(ks[0], D, H * Dh, cfg, (FSDP, TP))
+    params["wk"], specs["wk"] = dense_init(ks[1], D, KV * Dh, cfg, (FSDP, TP))
+    params["wv"], specs["wv"] = dense_init(ks[2], D, KV * Dh, cfg, (FSDP, TP))
+    params["wo"], specs["wo"] = dense_init(ks[3], H * Dh, D, cfg, (TP, FSDP))
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((Dh,), _dtype(cfg))
+        params["k_norm"] = jnp.ones((Dh,), _dtype(cfg))
+        specs["q_norm"] = P(None)
+        specs["k_norm"] = P(None)
+    return params, specs
+
+
+def _project_qkv(params: dict, x: jax.Array, positions: jax.Array,
+                 cfg: ModelConfig):
+    B, S, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, Dh)
+    k = (x @ params["wk"]).reshape(B, S, KV, Dh)
+    v = (x @ params["wv"]).reshape(B, S, KV, Dh)
+    if cfg.qk_norm:
+        q = head_norm_apply(params["q_norm"], q, cfg.norm_eps)
+        k = head_norm_apply(params["k_norm"], k, cfg.norm_eps)
+    inv = rope_freqs(cfg)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions[:, None, :], inv)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions[:, None, :], inv)
+    v = v.transpose(0, 2, 1, 3)
+    return q, k, v  # (B, H, S, Dh), (B, KV, S, Dh) x2
+
+
+def attn_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
+               causal: bool = True,
+               positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence (training / prefill) attention."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    q, k, v = _project_qkv(params, x, positions, cfg)
+    o = ops.attention(q, k, v, causal=causal)  # (B, H, S, Dh)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return o @ params["wo"]
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, KV, max_len, Dh), dtype),
+        "v": jnp.zeros((batch, KV, max_len, Dh), dtype),
+    }
+
+
+def attn_decode(params: dict, x: jax.Array, cache: dict, lengths: jax.Array,
+                cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One-token decode: x (B, 1, D); cache k/v (B, KV, S, Dh); lengths (B,).
+    Returns (B, 1, D) and the cache updated at position ``lengths``."""
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, x, lengths[:, None], cfg)
+    # scatter the new kv at each row's write position
+    b_idx = jnp.arange(B)
+    k_cache = cache["k"].at[b_idx, :, lengths, :].set(
+        k_new[:, :, 0, :].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[b_idx, :, lengths, :].set(
+        v_new[:, :, 0, :].astype(cache["v"].dtype))
+    o = ops.decode_attention(q[:, :, 0, :], k_cache, v_cache, lengths + 1)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return o @ params["wo"], {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def cross_attn_init(key, cfg: ModelConfig):
+    return attn_init(key, cfg)
+
+
+def cross_attn_apply(params: dict, x: jax.Array, enc_out: jax.Array,
+                     cfg: ModelConfig) -> jax.Array:
+    """x: (B, Sq, D) queries; enc_out: (B, Se, D) keys/values (no RoPE —
+    whisper uses learned/sinusoidal positions folded into the stub)."""
+    B, Sq, _ = x.shape
+    Se = enc_out.shape[1]
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, Sq, H, Dh).transpose(0, 2, 1, 3)
+    k = (enc_out @ params["wk"]).reshape(B, Se, KV, Dh).transpose(0, 2, 1, 3)
+    v = (enc_out @ params["wv"]).reshape(B, Se, KV, Dh).transpose(0, 2, 1, 3)
+    o = ops.attention(q, k, v, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(B, Sq, H * Dh)
+    return o @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    ks = jax.random.split(key, 3)
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    params, specs = {}, {}
+    params["w_gate"], specs["w_gate"] = dense_init(ks[0], D, F, cfg, (FSDP, TP))
+    params["w_up"], specs["w_up"] = dense_init(ks[1], D, F, cfg, (FSDP, TP))
+    params["w_down"], specs["w_down"] = dense_init(ks[2], F, D, cfg, (TP, FSDP))
+    return params, specs
+
+
+def mlp_apply(params: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+    u = (x @ params["w_up"]).astype(jnp.float32)
+    return ((g * u).astype(x.dtype)) @ params["w_down"]

@@ -1,0 +1,126 @@
+"""Selective SSM (Mamba) block — jamba's sub-quadratic layer.
+
+Training/prefill uses the *parallel* form: the diagonal linear recurrence
+  h_t = exp(Δ_t A) ⊙ h_{t−1} + Δ_t B_t x_t
+is evaluated with ``jax.lax.associative_scan`` over time (Blelloch — the
+TPU-idiomatic replacement for Mamba's CUDA selective-scan kernel; the
+hardware-adaptation note in DESIGN.md §3 applies: a warp-parallel scan
+becomes a log-depth associative scan XLA schedules across the VPU).
+
+Decode carries O(1) state per layer: (conv window (d_conv−1, d_inner),
+ssm state (d_inner, d_state)) — this is what makes jamba's ``long_500k``
+cell runnable where full attention is not.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import FSDP, TP, _dtype, dense_init
+
+
+def ssm_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    Din = cfg.ssm_expand * D
+    N = cfg.d_state
+    ks = jax.random.split(key, 7)
+    params, specs = {}, {}
+    params["w_in"], specs["w_in"] = dense_init(ks[0], D, 2 * Din, cfg, (FSDP, TP))
+    params["w_out"], specs["w_out"] = dense_init(ks[1], Din, D, cfg, (TP, FSDP))
+    # depthwise causal conv over the inner channels
+    params["conv_w"] = (jax.random.normal(ks[2], (cfg.d_conv, Din), jnp.float32)
+                        / np.sqrt(cfg.d_conv)).astype(_dtype(cfg))
+    specs["conv_w"] = P(None, TP)
+    params["conv_b"] = jnp.zeros((Din,), _dtype(cfg))
+    specs["conv_b"] = P(TP)
+    # data-dependent Δ, B, C projections
+    params["w_bc"], specs["w_bc"] = dense_init(ks[3], Din, 2 * N, cfg, (FSDP, None))
+    params["w_dt"], specs["w_dt"] = dense_init(ks[4], Din, Din, cfg, (FSDP, TP),
+                                               scale=0.01)
+    params["dt_bias"] = jnp.asarray(
+        np.log(np.expm1(np.linspace(1e-3, 1e-1, Din))), _dtype(cfg))
+    specs["dt_bias"] = P(TP)
+    # A: negative-real diagonal (S4D-real init), stored as log(−A)
+    a = np.tile(np.arange(1, N + 1, dtype=np.float32)[None, :], (Din, 1))
+    params["A_log"] = jnp.asarray(np.log(a), jnp.float32)
+    specs["A_log"] = P(TP, None)
+    params["D_skip"] = jnp.ones((Din,), jnp.float32)
+    specs["D_skip"] = P(TP)
+    return params, specs
+
+
+def _ssm_core(u: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+              A_log: jax.Array, D_skip: jax.Array,
+              h0: jax.Array | None = None):
+    """u: (B, S, Din); dt: (B, S, Din); B/C: (B, S, N).
+    Returns (y (B, S, Din), h_last (B, Din, N))."""
+    A = -jnp.exp(A_log)                                   # (Din, N)
+    dA = jnp.exp(dt[..., None] * A[None, None])           # (B, S, Din, N)
+    dBx = (dt * u)[..., None] * B[:, :, None, :]          # (B, S, Din, N)
+    if h0 is not None:
+        # fold the carried state into step 0: h_0' = dA_0 h_{-1} + dBx_0
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+    def combine(a, b):
+        a1, a2 = a
+        b1, b2 = b
+        return (a1 * b1, a2 * b1 + b2)
+    _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, C)
+    y = y + u * D_skip[None, None]
+    return y, hs[:, -1]
+
+
+def ssm_apply(params: dict, x: jax.Array, cfg: ModelConfig,
+              conv_state: jax.Array | None = None,
+              ssm_state: jax.Array | None = None,
+              return_state: bool = False):
+    """Full-sequence apply.  x: (B, S, D)."""
+    Bsz, S, D = x.shape
+    Din = cfg.ssm_expand * D
+    N = cfg.d_state
+    xz = x @ params["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)                      # (B, S, Din) each
+    # causal depthwise conv (width d_conv)
+    pad = cfg.d_conv - 1
+    if conv_state is not None:
+        u_pad = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    else:
+        u_pad = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+    windows = jnp.stack(
+        [u_pad[:, i:i + S, :] for i in range(cfg.d_conv)], axis=2)
+    u_conv = jnp.einsum("bskd,kd->bsd", windows, params["conv_w"]) + params["conv_b"]
+    u_conv = jax.nn.silu(u_conv.astype(jnp.float32)).astype(x.dtype)
+    # data-dependent SSM parameters
+    bc = u_conv @ params["w_bc"]
+    Bm, Cm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)      # (B, S, N)
+    dt = jax.nn.softplus(
+        (u_conv @ params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))                 # (B, S, Din)
+    y, h_last = _ssm_core(u_conv.astype(jnp.float32), dt, Bm, Cm,
+                          params["A_log"], params["D_skip"],
+                          h0=ssm_state)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["w_out"]
+    if return_state:
+        new_conv = u_pad[:, -pad:, :] if pad > 0 else jnp.zeros(
+            (Bsz, 0, Din), x.dtype)
+        return out, (new_conv.astype(jnp.float32), h_last)
+    return out
+
+
+def ssm_state_init(cfg: ModelConfig, batch: int) -> tuple[jax.Array, jax.Array]:
+    Din = cfg.ssm_expand * cfg.d_model
+    return (jnp.zeros((batch, cfg.d_conv - 1, Din), jnp.float32),
+            jnp.zeros((batch, Din, cfg.d_state), jnp.float32))
+
+
+def ssm_decode(params: dict, x: jax.Array, state, cfg: ModelConfig):
+    """One-token decode: x (B, 1, D); state = (conv (B, d_conv-1, Din),
+    h (B, Din, N)).  O(1) compute/memory per step."""
+    out, new_state = ssm_apply(params, x, cfg,
+                               conv_state=state[0], ssm_state=state[1],
+                               return_state=True)
+    return out, new_state

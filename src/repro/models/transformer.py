@@ -1,0 +1,404 @@
+"""Composable LM assembly for all 10 assigned architectures.
+
+Layer layout = ``n_dense_prefix`` unrolled layers + ``jax.lax.scan`` over
+periods of ``block_pattern`` (the HLO stays one-period-sized regardless of
+depth — compile-time and multi-pod dry-run friendly).  Per-slot params are
+stacked on a leading period axis; remat (jax.checkpoint) wraps the period
+body.
+
+Block kinds: "attn" (GQA, optional qk-norm / cross-attn), "mamba"
+(selective SSM), "mlstm"/"slstm" (xLSTM).  FFN sublayer per slot: dense
+gated MLP or MoE (expert-parallel), per ``cfg.layer_is_moe``.
+
+Decode: per-slot recurrent state (KV cache / SSM state / xLSTM state)
+stacked the same way, threaded through the same scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+from . import xlstm as X
+
+
+def _dp_axes(mesh) -> tuple:
+    if mesh is None:
+        return ()
+    return tuple(a for a in mesh.axis_names if a != L.TP)
+
+
+def shard_act(x, mesh, *, batch_dim: int = 0, seq_dim: int | None = None):
+    """Constrain an activation: batch over the data axes and — when
+    ``seq_dim`` is given and divisible — sequence over the TP axis
+    (sequence parallelism: the residual stream that scan saves for the
+    backward pass is then 1/tp per device; XLA inserts the
+    all-gather/reduce-scatter pairs around attention/MLP automatically)."""
+    if mesh is None:
+        return x
+    dp = _dp_axes(mesh)
+    spec: list = [None] * x.ndim
+    if dp and x.shape[batch_dim] % int(np.prod([mesh.shape[a] for a in dp])) == 0 \
+            and x.shape[batch_dim] > 1:
+        spec[batch_dim] = dp
+    if seq_dim is not None and L.TP in mesh.axis_names:
+        tp = mesh.shape[L.TP]
+        if tp > 1 and x.shape[seq_dim] % tp == 0 and x.shape[seq_dim] >= tp:
+            spec[seq_dim] = L.TP
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# per-slot init
+# ---------------------------------------------------------------------------
+def _slot_init(key, kind: str, is_moe: bool, cfg: ModelConfig,
+               with_cross: bool = False):
+    ks = jax.random.split(key, 6)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    params["norm1"], specs["norm1"] = L.norm_init(cfg)
+    if kind == "attn":
+        params["attn"], specs["attn"] = L.attn_init(ks[0], cfg)
+    elif kind == "mamba":
+        params["ssm"], specs["ssm"] = S.ssm_init(ks[0], cfg)
+    elif kind == "mlstm":
+        params["mlstm"], specs["mlstm"] = X.mlstm_init(ks[0], cfg)
+    elif kind == "slstm":
+        params["slstm"], specs["slstm"] = X.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if with_cross:
+        params["norm_x"], specs["norm_x"] = L.norm_init(cfg)
+        params["cross"], specs["cross"] = L.cross_attn_init(ks[1], cfg)
+    if kind in ("attn", "mamba"):  # xlstm blocks carry their own FFN
+        params["norm2"], specs["norm2"] = L.norm_init(cfg)
+        if is_moe:
+            params["moe"], specs["moe"] = M.moe_init(ks[2], cfg)
+        else:
+            params["mlp"], specs["mlp"] = L.mlp_init(ks[2], cfg)
+    return params, specs
+
+
+def _slot_apply(kind: str, params: dict, x, cfg: ModelConfig, mesh,
+                enc_out=None):
+    """Full-sequence apply of one block."""
+    h = L.norm_apply(params["norm1"], x, cfg)
+    if kind == "attn":
+        x = x + L.attn_apply(params["attn"], h, cfg, causal=not cfg.is_encdec
+                             or enc_out is not None)
+    elif kind == "mamba":
+        x = x + S.ssm_apply(params["ssm"], h, cfg)
+    elif kind == "mlstm":
+        x = x + X.mlstm_apply(params["mlstm"], h, cfg)
+    elif kind == "slstm":
+        x = x + X.slstm_apply(params["slstm"], h, cfg)
+    if "cross" in params and enc_out is not None:
+        hx = L.norm_apply(params["norm_x"], x, cfg)
+        x = x + L.cross_attn_apply(params["cross"], hx, enc_out, cfg)
+    if "moe" in params:
+        h2 = L.norm_apply(params["norm2"], x, cfg)
+        x = x + M.moe_apply(params["moe"], h2, cfg, mesh=mesh)
+    elif "mlp" in params:
+        h2 = L.norm_apply(params["norm2"], x, cfg)
+        x = x + L.mlp_apply(params["mlp"], h2)
+    # sequence-parallel residual: the value scan saves for backward is
+    # sharded over TP as well as DP
+    return shard_act(x, mesh, seq_dim=1)
+
+
+def _slot_is_moe(cfg: ModelConfig, slot: int) -> bool:
+    if cfg.moe is None or cfg.moe_every <= 0:
+        return False
+    return slot % cfg.moe_every == (cfg.moe_every - 1) % cfg.moe_every
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig):
+    """Returns (params, pspecs) with identical tree structure."""
+    ks = jax.random.split(key, 16)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    dt = jnp.dtype(cfg.param_dtype)
+    emb = (jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model),
+                             jnp.float32) * 0.02).astype(dt)
+    params["embed"] = emb
+    specs["embed"] = P(L.TP, None)
+
+    # dense prefix layers (unrolled)
+    prefix, prefix_specs = [], []
+    for i in range(cfg.n_dense_prefix):
+        p, s = _slot_init(ks[1 + i], "attn", False, cfg)
+        prefix.append(p)
+        prefix_specs.append(s)
+    if prefix:
+        params["prefix"] = prefix
+        specs["prefix"] = prefix_specs
+
+    # scanned body: stack per-slot params over periods
+    n_p = cfg.n_periods
+    body, body_specs = {}, {}
+    for s_idx, kind in enumerate(cfg.block_pattern):
+        is_moe = _slot_is_moe(cfg, s_idx)
+        stacked, stacked_specs = _stack_periods(
+            ks[8], s_idx, kind, is_moe, cfg, n_p)
+        body[f"slot{s_idx}"] = stacked
+        body_specs[f"slot{s_idx}"] = stacked_specs
+    params["body"] = body
+    specs["body"] = body_specs
+
+    if cfg.is_encdec:
+        st, sts = _stack_periods(ks[9], 0, "attn", False, cfg,
+                                 cfg.n_enc_layers, salt=101)
+        params["enc_body"] = {"slot0": st}
+        specs["enc_body"] = {"slot0": sts}
+        # decoder cross-attention lives in body slots — rebuild with cross
+        body, body_specs = {}, {}
+        for s_idx, kind in enumerate(cfg.block_pattern):
+            stacked, stacked_specs = _stack_periods(
+                ks[10], s_idx, kind, _slot_is_moe(cfg, s_idx), cfg, n_p,
+                with_cross=True)
+            body[f"slot{s_idx}"] = stacked
+            body_specs[f"slot{s_idx}"] = stacked_specs
+        params["body"] = body
+        specs["body"] = body_specs
+
+    params["final_norm"], specs["final_norm"] = L.norm_init(cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"], specs["lm_head"] = L.dense_init(
+            ks[11], cfg.d_model, cfg.padded_vocab, cfg, (None, L.TP))
+    return params, specs
+
+
+def _stack_periods(key, s_idx, kind, is_moe, cfg, n_p, with_cross=False,
+                   salt=0):
+    """Init one slot n_p times and stack leaves on a leading axis."""
+    keys = jax.random.split(jax.random.fold_in(key, s_idx * 131 + salt), n_p)
+    ps, sp0 = [], None
+    for i in range(n_p):
+        p, sp = _slot_init(keys[i], kind, is_moe, cfg, with_cross=with_cross)
+        ps.append(p)
+        sp0 = sp
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *ps)
+    stacked_specs = jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))), sp0,
+        is_leaf=lambda s: isinstance(s, P))
+    return stacked, stacked_specs
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    return params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+
+
+def _body_scan(params_body, x, cfg: ModelConfig, mesh, enc_out=None,
+               remat: bool = True):
+    def period_fn(x, period_params):
+        for s_idx, kind in enumerate(cfg.block_pattern):
+            x = _slot_apply(kind, period_params[f"slot{s_idx}"], x, cfg,
+                            mesh, enc_out=enc_out)
+        return x
+
+    if remat:
+        # remat policy knob (§Perf): "nothing" recomputes the whole period
+        # in the backward (min memory, max recompute — the default);
+        # "dots" saves matmul outputs (skips recompute incl. the FSDP
+        # re-gathers it needs, at an activation-memory cost).
+        import os
+        policy_name = os.environ.get("REPRO_REMAT_POLICY", "nothing")
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if policy_name == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        period_fn = jax.checkpoint(period_fn, policy=policy)
+
+    def scan_fn(x, period_params):
+        return period_fn(x, period_params), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params_body)
+    return x
+
+
+def forward(params, batch: dict, cfg: ModelConfig, mesh=None) -> jax.Array:
+    """Returns logits (B, S_total, V).
+
+    batch keys by family:
+      tokens (B, S) int32                     — all LMs
+      prefix_embeds (B, Np, D)                — vlm stub (prepended)
+      frames (B, Se, D)                       — audio stub (encoder input)
+    """
+    x = hidden_states(params, batch, cfg, mesh)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return x @ head.astype(x.dtype)
+
+
+def hidden_states(params, batch: dict, cfg: ModelConfig, mesh=None):
+    """Forward up to (but not including) the LM head."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.frontend == "vision_stub":
+        pe = batch["prefix_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    x = shard_act(x, mesh, seq_dim=1)
+    enc_out = None
+    if cfg.is_encdec:
+        e = batch["frames"].astype(x.dtype)
+        e = shard_act(e, mesh, seq_dim=1)
+        e = _body_scan(params["enc_body"], e, cfg, mesh)
+        enc_out = L.norm_apply(params["final_norm"], e, cfg)
+    for p in params.get("prefix", []):
+        x = _slot_apply("attn", p, x, cfg, mesh)
+    x = _body_scan(params["body"], x, cfg, mesh, enc_out=enc_out)
+    return L.norm_apply(params["final_norm"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, mesh=None,
+            loss_chunks: int = 8) -> jax.Array:
+    """Next-token cross entropy; labels < 0 are masked (vlm prefix, pad).
+
+    The LM head + CE run *chunked over tokens* under remat: only one
+    chunk of f32 logits is live at a time (kimi: 163k vocab × 1M tokens
+    would otherwise hold ~2.5 GB/device of logits twice through the
+    backward pass)."""
+    x = hidden_states(params, batch, cfg, mesh)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_stub":
+        npfx = batch["prefix_embeds"].shape[1]
+        pad = jnp.full((labels.shape[0], npfx), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    lt = labels.reshape(B * S)
+    n_chunks = loss_chunks if (B * S) % loss_chunks == 0 else 1
+
+    def chunk_nll(x_c, l_c):
+        logits = (x_c @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(l_c, 0)[:, None], axis=-1)[:, 0]
+        mask = (l_c >= 0).astype(jnp.float32)
+        return jnp.sum((lse - ll) * mask), jnp.sum(mask)
+
+    if n_chunks == 1:
+        total, count = chunk_nll(xt, lt)
+    else:
+        xc = xt.reshape(n_chunks, -1, D)
+        lc = lt.reshape(n_chunks, -1)
+
+        @jax.checkpoint
+        def body(carry, xs):
+            t, c = carry
+            dt, dc = chunk_nll(*xs)
+            return (t + dt, c + dc), None
+
+        (total, count), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xc, lc))
+    return total / jnp.maximum(count, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked per-slot decode states mirroring the body layout."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def one(kind):
+        if kind == "attn":
+            return L.attn_cache_init(cfg, batch, max_len, dt)
+        if kind == "mamba":
+            return S.ssm_state_init(cfg, batch)
+        if kind == "mlstm":
+            return X.mlstm_state_init(cfg, batch)
+        if kind == "slstm":
+            return X.slstm_state_init(cfg, batch)
+        raise ValueError(kind)
+
+    state = {}
+    for s_idx, kind in enumerate(cfg.block_pattern):
+        per = [one(kind) for _ in range(cfg.n_periods)]
+        state[f"slot{s_idx}"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=0), *per)
+    prefix_states = [one("attn") for _ in range(cfg.n_dense_prefix)]
+    if prefix_states:
+        state["prefix"] = prefix_states
+    return state
+
+
+def _slot_decode(kind, params, x, state, lengths, cfg, mesh, enc_out=None):
+    h = L.norm_apply(params["norm1"], x, cfg)
+    if kind == "attn":
+        o, state = L.attn_decode(params["attn"], h, state, lengths, cfg)
+        x = x + o
+    elif kind == "mamba":
+        o, state = S.ssm_decode(params["ssm"], h, state, cfg)
+        x = x + o
+    elif kind == "mlstm":
+        o, state = X.mlstm_decode(params["mlstm"], h, state, cfg)
+        x = x + o
+    elif kind == "slstm":
+        o, state = X.slstm_decode(params["slstm"], h, state, cfg)
+        x = x + o
+    if "cross" in params and enc_out is not None:
+        hx = L.norm_apply(params["norm_x"], x, cfg)
+        x = x + L.cross_attn_apply(params["cross"], hx, enc_out, cfg)
+    if "moe" in params:
+        h2 = L.norm_apply(params["norm2"], x, cfg)
+        x = x + M.moe_apply(params["moe"], h2, cfg, mesh=mesh)
+    elif "mlp" in params:
+        h2 = L.norm_apply(params["norm2"], x, cfg)
+        x = x + L.mlp_apply(params["mlp"], h2)
+    return x, state
+
+
+def decode_step(params, state: dict, tokens: jax.Array, lengths: jax.Array,
+                cfg: ModelConfig, mesh=None, enc_out=None):
+    """One decode step.  tokens: (B,) int32 — the freshly sampled token;
+    lengths: (B,) current context lengths.  Returns (logits (B, V),
+    new_state)."""
+    x = embed_tokens(params, tokens[:, None], cfg)      # (B, 1, D)
+
+    new_prefix = []
+    for p, st in zip(params.get("prefix", []), state.get("prefix", [])):
+        x, st2 = _slot_decode("attn", p, x, st, lengths, cfg, mesh,
+                              enc_out=enc_out)
+        new_prefix.append(st2)
+
+    def scan_fn(carry, xs):
+        x = carry
+        period_params, period_state = xs
+        new_state = {}
+        for s_idx, kind in enumerate(cfg.block_pattern):
+            x, st = _slot_decode(kind, period_params[f"slot{s_idx}"], x,
+                                 period_state[f"slot{s_idx}"], lengths, cfg,
+                                 mesh, enc_out=enc_out)
+            new_state[f"slot{s_idx}"] = st
+        return x, new_state
+
+    body_state = {k: v for k, v in state.items() if k != "prefix"}
+    x, new_body = jax.lax.scan(scan_fn, x, (params["body"], body_state))
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ head.astype(x.dtype))[:, 0, :]
+    out_state = dict(new_body)
+    if new_prefix:
+        out_state["prefix"] = new_prefix
+    return logits, out_state

@@ -1,0 +1,301 @@
+"""xLSTM blocks (sLSTM + mLSTM) — arXiv:2405.04517, TPU-adapted.
+
+* **mLSTM** (matrix memory, exponential gating): trained with the
+  *parallel* quadratic form — a decay-masked attention-like product
+  D_{ts} = exp(Σ_{r≤t} log f_r − Σ_{r≤s} log f_r + log i_s) for s ≤ t,
+  row-stabilized like flash attention.  Decode is the O(1) recurrence on
+  the (d_k × d_v) matrix state.  The paper's CUDA kernels become plain
+  MXU matmuls over the (S × S) decay-masked scores — for the assigned
+  350M config at train_4k this is the faithful quadratic-cost choice;
+  the recurrent decode is what earns the ``long_500k`` cell.
+
+* **sLSTM** (scalar memory, new-style gating with normalizer/stabilizer
+  state): an inherently serial recurrence — evaluated with
+  ``jax.lax.scan`` over time (compact HLO; noted as the latency-bound
+  layer in the roofline analysis).  xlstm-350m places one sLSTM per
+  8-layer period.
+
+Blocks carry their own up/down projections (the assigned config's
+``d_ff=0``): mLSTM uses a 2× pre-up-projection (qkv live in the expanded
+space), sLSTM a post-block gated FFN of factor 4/3, per the paper's block
+designs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import FSDP, TP, _dtype, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    Dp = 2 * D                      # paper: expansion 2 before qkv
+    H = cfg.xlstm_heads
+    ks = jax.random.split(key, 8)
+    params, specs = {}, {}
+    params["w_up"], specs["w_up"] = dense_init(ks[0], D, 2 * Dp, cfg, (FSDP, TP))
+    params["w_q"], specs["w_q"] = dense_init(ks[1], Dp, Dp, cfg, (FSDP, TP))
+    params["w_k"], specs["w_k"] = dense_init(ks[2], Dp, Dp, cfg, (FSDP, TP))
+    params["w_v"], specs["w_v"] = dense_init(ks[3], Dp, Dp, cfg, (FSDP, TP))
+    params["w_if"], specs["w_if"] = dense_init(ks[4], Dp, 2 * H, cfg, (FSDP, None),
+                                               scale=0.02)
+    params["if_bias"] = jnp.concatenate([
+        jnp.zeros((H,), jnp.float32),                 # input gate bias
+        jnp.linspace(3.0, 6.0, H).astype(jnp.float32)  # forget gate bias (high)
+    ])
+    specs["if_bias"] = P(None)
+    params["w_down"], specs["w_down"] = dense_init(ks[5], Dp, D, cfg, (TP, FSDP))
+    params["skip_scale"] = jnp.ones((Dp,), _dtype(cfg))
+    specs["skip_scale"] = P(TP)
+    return params, specs
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk: int = 256):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q/k/v: (B, H, S, Dh); log_i/log_f: (B, H, S); state = (C, n, m) with
+    C stored *stabilized* (C_true = C·e^m).  Quadratic work only within a
+    chunk ((B,H,c,c) scores), linear recurrence across chunks — the
+    memory shape that makes train_4k×256 shardable, and the same
+    chunk-size trade the xLSTM TFLA kernels make on GPU.
+
+    Returns (h (B, H, S, Dh), final state)."""
+    B, H, S, Dh = q.shape
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    nchunk = S // c
+    scale = 1.0 / np.sqrt(Dh)
+
+    def resh(t, last=None):
+        newshape = (B, H, nchunk, c) + ((last,) if last else ())
+        return t.reshape(newshape)
+
+    qc = resh(q, Dh) * scale
+    kc = resh(k, Dh)
+    vc = resh(v, Dh)
+    lic = resh(log_i)
+    lfc = resh(log_f)
+
+    def chunk_step(carry, xs):
+        C0, n0, m0 = carry                       # (B,H,Dh,Dh), (B,H,Dh), (B,H)
+        qk, kk, vk, li, lf = xs                  # (B,H,c,·)
+        F = jnp.cumsum(lf, axis=-1)              # (B,H,c)
+        # intra-chunk log decay matrix w_ts = F_t − F_s + li_s, s ≤ t
+        logD = F[..., :, None] - F[..., None, :] + li[..., None, :]
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        logD = jnp.where(causal[None, None], logD, NEG_INF)
+        m_intra = logD.max(axis=-1)              # (B,H,c)
+        m_inter = m0[..., None] + F              # (B,H,c)
+        m_t = jnp.maximum(m_intra, m_inter)      # matches the recurrence
+        Dmat = jnp.exp(logD - m_t[..., None])    # (B,H,c,c)
+        inter_w = jnp.exp(m_inter - m_t)         # (B,H,c)
+        scores = qk @ kk.transpose(0, 1, 3, 2)   # (B,H,c,c)
+        num = (scores * Dmat) @ vk \
+            + inter_w[..., None] * jnp.einsum("bhcd,bhdv->bhcv", qk, C0)
+        den_vec = (scores * Dmat).sum(axis=-1) \
+            + inter_w * jnp.einsum("bhcd,bhd->bhc", qk, n0)
+        den = jnp.maximum(jnp.abs(den_vec), jnp.exp(-m_t))
+        h = num / den[..., None]
+        # carry update at chunk end (t = c-1 semantics of the recurrence)
+        F_end = F[..., -1]
+        m_new = jnp.maximum(m0 + F_end, (F_end[..., None] - F + li).max(-1))
+        carry_w = jnp.exp(F_end[..., None] - F + li - m_new[..., None])  # (B,H,c)
+        C1 = jnp.exp(m0 + F_end - m_new)[..., None, None] * C0 \
+            + jnp.einsum("bhc,bhcd,bhcv->bhdv", carry_w, kk, vk)
+        n1 = jnp.exp(m0 + F_end - m_new)[..., None] * n0 \
+            + jnp.einsum("bhc,bhcd->bhd", carry_w, kk)
+        return (C1, n1, m_new), h
+
+    xs = (qc.transpose(2, 0, 1, 3, 4), kc.transpose(2, 0, 1, 3, 4),
+          vc.transpose(2, 0, 1, 3, 4), lic.transpose(2, 0, 1, 3),
+          lfc.transpose(2, 0, 1, 3))
+    final, hs = jax.lax.scan(chunk_step, state, xs)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, Dh)
+    return h, final
+
+
+def mlstm_apply(params: dict, x: jax.Array, cfg: ModelConfig,
+                state=None, return_state: bool = False):
+    B, S, D = x.shape
+    H = cfg.xlstm_heads
+    up = x @ params["w_up"]
+    xin, z = jnp.split(up, 2, axis=-1)                 # (B, S, Dp)
+    Dp = xin.shape[-1]
+    Dh = Dp // H
+    q = (xin @ params["w_q"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+    k = (xin @ params["w_k"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+    v = (xin @ params["w_v"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+    gates = (xin @ params["w_if"]).astype(jnp.float32) + params["if_bias"]
+    log_i = gates[..., :H].transpose(0, 2, 1)          # (B, H, S) — log-space
+    log_f = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    if S == 1 and state is not None:
+        h, h_last = _mlstm_recurrent(qf, kf, vf, log_i, log_f, state)
+    else:
+        st = state if state is not None else mlstm_state_init_raw(B, H, Dh)
+        h, h_last = mlstm_chunkwise(qf, kf, vf, log_i, log_f, st,
+                                    chunk=_pick_chunk(S))
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, Dp).astype(x.dtype)
+    h = h + params["skip_scale"] * xin                 # learnable skip
+    out = (h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)) @ params["w_down"]
+    if return_state:
+        return out, h_last
+    return out
+
+
+def _mlstm_recurrent(q, k, v, log_i, log_f, state):
+    """Step the matrix memory for S (usually 1) tokens.
+    state = (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H))."""
+    C0, n0, m0 = state
+    Dh = q.shape[-1]
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt = q[:, :, t], k[:, :, t], v[:, :, t]   # (B, H, Dh)
+        li, lf = log_i[:, :, t], log_f[:, :, t]
+        m_new = jnp.maximum(lf + m, li)
+        f_ = jnp.exp(lf + m - m_new)[..., None]
+        i_ = jnp.exp(li - m_new)[..., None]
+        kt_s = kt / np.sqrt(Dh)
+        C = f_[..., None] * C + i_[..., None] * (kt_s[..., :, None] * vt[..., None, :])
+        n = f_ * n + i_ * kt_s
+        num = jnp.einsum("bhd,bhdv->bhv", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0),
+                                 jnp.arange(q.shape[2]))
+    # hs: (S, B, H, Dh) → (B, H, S, Dh)
+    return hs.transpose(1, 2, 0, 3), (C, n, m)
+
+
+def _pick_chunk(S: int) -> int:
+    for c in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if S % c == 0:
+            return c
+    return 1
+
+
+def mlstm_state_init_raw(B, H, Dh):
+    return (jnp.zeros((B, H, Dh, Dh), jnp.float32),
+            jnp.zeros((B, H, Dh), jnp.float32),
+            jnp.zeros((B, H), jnp.float32))
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int):
+    Dp = 2 * cfg.d_model
+    Dh = Dp // cfg.xlstm_heads
+    return mlstm_state_init_raw(batch, cfg.xlstm_heads, Dh)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    H = cfg.xlstm_heads
+    ks = jax.random.split(key, 4)
+    params, specs = {}, {}
+    # fused input projection for (z, i, f, o) pre-activations
+    params["w_x"], specs["w_x"] = dense_init(ks[0], D, 4 * D, cfg, (FSDP, TP))
+    # recurrent weights are BLOCK-DIAGONAL over heads (paper §sLSTM):
+    # (H, D/H, 4·D/H) — H× fewer recurrent params/bytes than dense, and
+    # the per-timestep weight re-stream in the serial scan shrinks with it
+    # (§Perf cell A: this is the dominant HBM term of the time scan)
+    Dh = D // H
+    params["w_h"] = (jax.random.normal(ks[1], (H, Dh, 4 * Dh), jnp.float32)
+                     * 0.02).astype(jnp.dtype(cfg.param_dtype))
+    specs["w_h"] = P(None, FSDP, TP)
+    params["bias"] = jnp.concatenate([
+        jnp.zeros((2 * D,), jnp.float32),
+        jnp.full((D,), 3.0, jnp.float32),   # forget bias
+        jnp.zeros((D,), jnp.float32)]).astype(jnp.float32)
+    specs["bias"] = P(None)
+    # post-block gated FFN (factor 4/3, paper block design), rounded up to
+    # a 128 multiple so the TP shard divides evenly (and MXU-aligned)
+    f = -(-int(D * 4 / 3) // 128) * 128
+    params["w_ff_up"], specs["w_ff_up"] = dense_init(ks[2], D, 2 * f, cfg, (FSDP, TP))
+    params["w_ff_down"], specs["w_ff_down"] = dense_init(ks[3], f, D, cfg, (TP, FSDP))
+    return params, specs
+
+
+def slstm_apply(params: dict, x: jax.Array, cfg: ModelConfig,
+                state=None, return_state: bool = False):
+    """x: (B, S, D).  Serial scan over time (sLSTM is not parallelizable:
+    the normalizer/stabilizer recurrence is data-dependent)."""
+    B, S, D = x.shape
+    xin = (x @ params["w_x"]).astype(jnp.float32)       # (B, S, 4D)
+    if state is None:
+        state = slstm_state_init(cfg, B)
+    h0, c0, n0, m0 = state
+    H = cfg.xlstm_heads
+    Dh = D // H
+
+    def cell(carry, x_t):
+        h, c, n, m = carry
+        # block-diagonal recurrence: per-head (B, Dh) @ (Dh, 4Dh)
+        hh = h.astype(x.dtype).reshape(B, H, Dh)
+        rec = jnp.einsum("bhd,hdf->bhf", hh, params["w_h"])
+        rec = rec.reshape(B, H, 4, Dh).transpose(0, 2, 1, 3).reshape(B, 4 * D)
+        pre = x_t + rec.astype(jnp.float32) + params["bias"]
+        z, i, f, o = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        log_f = jax.nn.log_sigmoid(f)
+        m_new = jnp.maximum(log_f + m, i)
+        i_ = jnp.exp(i - m_new)
+        f_ = jnp.exp(log_f + m - m_new)
+        c = f_ * c + i_ * z
+        n = f_ * n + i_
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    # time-blocked scan (§Perf hillclimb A): the serial recurrence is
+    # irreducible, but scanning one step at a time spends most of its
+    # traffic on per-step carry packing (stacked-buffer updates billed at
+    # full buffer size each step).  Blocks of TB steps read/write the
+    # xin/hs buffers once per TB steps; the inner loop unrolls.
+    TB = 32 if S % 32 == 0 else (8 if S % 8 == 0 else 1)
+
+    def block_step(carry, x_blk):            # x_blk: (TB, B, 4D)
+        hs_blk = []
+        for t in range(TB):
+            carry, h_t = cell(carry, x_blk[t])
+            hs_blk.append(h_t)
+        return carry, jnp.stack(hs_blk)
+
+    xin_t = xin.transpose(1, 0, 2).reshape(S // TB, TB, B, 4 * D)
+    (h, c, n, m), hs = jax.lax.scan(block_step, (h0, c0, n0, m0), xin_t)
+    y = hs.reshape(S, B, D).transpose(1, 0, 2).astype(x.dtype)  # (B, S, D)
+    # gated FFN
+    up = y @ params["w_ff_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    y = (jax.nn.gelu(a.astype(jnp.float32)) * b.astype(jnp.float32)
+         ).astype(x.dtype) @ params["w_ff_down"]
+    if return_state:
+        return y, (h, c, n, m)
+    return y
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int):
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), jnp.float32)
+    return (z, z, z, jnp.full((batch, D), NEG_INF, jnp.float32))
+
+
+def slstm_decode(params, x, state, cfg):
+    return slstm_apply(params, x, cfg, state=state, return_state=True)
+
+
+def mlstm_decode(params, x, state, cfg):
+    return mlstm_apply(params, x, cfg, state=state, return_state=True)

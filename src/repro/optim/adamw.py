@@ -1,0 +1,139 @@
+"""AdamW with optionally quantized first/second moments.
+
+Trillion-parameter configs (kimi-k2) cannot afford f32 moments: at 1T
+params, f32 (m, v) alone is 8 TB.  ``state_dtype``:
+
+  "float32"  — reference Adam (small/medium configs)
+  "bfloat16" — 2× smaller; update math still in f32
+  "int8"     — block-quantized moments (256-entry blocks, absmax scale,
+               the 8-bit-Adam recipe) — 8× smaller than f32; the
+               dequant→update→requant round-trip is fused by XLA.
+
+State is a pytree mirroring params; every leaf keeps the param's sharding,
+so FSDP/TP sharding of the moments comes for free from the param specs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+#: leaves smaller than this keep f32 moments (quantization overhead
+#: dominates below it)
+_QUANT_MIN = 1 << 16
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"   # float32 | bfloat16 | int8
+    #: stacked scanned-body leaves bigger than this (elements) update via
+    #: lax.map over the leading period axis, bounding f32 temp memory
+    scan_update_min: int = 1 << 28
+
+
+def _q_init(x):
+    """Per-row (last-axis) absmax int8: ``q`` keeps the param's SHAPE and
+    therefore its SHARDING — quantized moments never force a relayout
+    (flat-block layouts regather the whole tensor at every step; measured
+    2.5 TB/device temp on kimi before this layout)."""
+    return {
+        "q": jnp.zeros(x.shape, jnp.int8),
+        "scale": jnp.zeros(x.shape[:-1], jnp.float32),
+    }
+
+
+def _q_quant(val: jax.Array, like_shape) -> dict:
+    vf = val.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(vf), axis=-1) / 127.0
+    q = jnp.round(vf / jnp.maximum(scale, 1e-12)[..., None]).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def _q_dequant(st: dict, shape) -> jax.Array:
+    return st["q"].astype(jnp.float32) * st["scale"][..., None]
+
+
+def _leaf_quantized(p) -> bool:
+    n = 1
+    for d in p.shape:
+        n *= d
+    return n >= _QUANT_MIN and len(p.shape) >= 2
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    if cfg.state_dtype == "int8":
+        def init_leaf(p):
+            if _leaf_quantized(p):
+                return _q_init(p)
+            return jnp.zeros(p.shape, jnp.float32)
+        m = jax.tree.map(init_leaf, params)
+        v = jax.tree.map(init_leaf, params)
+    else:
+        dt = jnp.dtype(cfg.state_dtype)
+        m = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params)
+        v = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params)
+    return {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr_scale: jax.Array | float = 1.0):
+    """Returns (new_params, new_state).  Update math in f32 regardless of
+    storage dtype."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m_st, v_st):
+        gf = g.astype(jnp.float32)
+        quant = isinstance(m_st, dict)
+        if quant:
+            m_prev = _q_dequant(m_st, p.shape)
+            v_prev = _q_dequant(v_st, p.shape)
+        else:
+            m_prev = m_st.astype(jnp.float32)
+            v_prev = v_st.astype(jnp.float32)
+        m_new = cfg.b1 * m_prev + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v_prev + (1 - cfg.b2) * gf * gf
+        mh = m_new / bc1
+        vh = v_new / bc2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * pf)
+        if quant:
+            return (pf.astype(p.dtype), _q_quant(m_new, p.shape),
+                    _q_quant(v_new, p.shape))
+        dt = (jnp.float32 if cfg.state_dtype == "int8"
+              else jnp.dtype(cfg.state_dtype))
+        return pf.astype(p.dtype), m_new.astype(dt), v_new.astype(dt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    # flatten_up_to stops at param-leaf positions, so quantized moment
+    # subtrees ({"q","scale"} dicts) come through intact
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+
+    def upd_leaf(p, g, m, v):
+        # chunk the update over the leading (scan-period) axis for huge
+        # stacked leaves: bounds the f32 dequant/update temp to one slice
+        if (p.ndim >= 3 and p.size >= cfg.scan_update_min
+                and p.shape[0] > 1):
+            def body(args):
+                return upd(*args)
+            return jax.lax.map(body, (p, g, m, v))
+        return upd(p, g, m, v)
+
+    out = [upd_leaf(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,63 @@
+"""Error-feedback int8 gradient compression for the DP reduce.
+
+At multi-pod scale the data-parallel gradient reduce-scatter crosses the
+(slow) pod interconnect; int8 block-quantized gradients cut those bytes
+4× vs f32 / 2× vs bf16.  Error feedback (residual carried to the next
+step) keeps the compression unbiased in the long run — SGD-with-EF
+convergence applies.
+
+Usage in the train loop:
+    cgrads, new_resid = compress_grads(grads, resid)
+    # all-reduce cgrads (int8 payload + f32 scales: scales are 1/256 of
+    # the payload, reduced in f32)
+    grads = decompress_grads(cgrads)
+
+The compression is applied *after* the per-device grad computation and
+*before* the cross-pod reduce; within-pod reduces stay full precision
+(configured in runtime/train_loop.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+def _quant_leaf(g: jax.Array, r: jax.Array | None):
+    gf = g.astype(jnp.float32)
+    if r is not None:
+        gf = gf + r
+    n = gf.size
+    pad = (-n) % _BLOCK
+    flat = gf.reshape(-1)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)[:, None]).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n].reshape(g.shape)
+    resid = gf - deq
+    return {"q": q, "scale": scale, "shape": tuple(g.shape)}, resid
+
+
+def compress_grads(grads, residuals=None):
+    """Returns (compressed pytree, new residuals pytree)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    res_leaves = (treedef.flatten_up_to(residuals)
+                  if residuals is not None else [None] * len(leaves))
+    outs = [_quant_leaf(g, r) for g, r in zip(leaves, res_leaves)]
+    comp = treedef.unflatten([o[0] for o in outs])
+    resid = treedef.unflatten([o[1] for o in outs])
+    return comp, resid
+
+
+def decompress_grads(comp):
+    def deq(st):
+        flat = (st["q"].astype(jnp.float32) * st["scale"][:, None]).reshape(-1)
+        n = 1
+        for d in st["shape"]:
+            n *= d
+        return flat[:n].reshape(st["shape"])
+    return jax.tree.map(deq, comp,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)

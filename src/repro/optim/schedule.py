@@ -1,0 +1,16 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, warmup: int = 200, total: int = 10000,
+                    min_ratio: float = 0.1):
+    """Linear warmup → cosine decay to min_ratio.  Returns a scale in
+    (0, 1] multiplying the base lr."""
+    s = jnp.asarray(step, jnp.float32)
+    # (s+1)/warmup: the first step trains at lr/warmup instead of zero
+    warm = jnp.minimum((s + 1.0) / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

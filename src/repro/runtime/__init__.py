@@ -1,0 +1,3 @@
+from .train_loop import TrainLoop, TrainLoopConfig  # noqa: F401
+from .straggler import StragglerPolicy  # noqa: F401
+from .serving import ServingEngine, Request  # noqa: F401

@@ -1,0 +1,74 @@
+"""ModelOracle: a zoo LM standing behind the Oracle interface.
+
+Replaces the paper's DeepSeek-V4-Flash with any architecture from the
+registry (greedy decode, deterministic).  The lexical fallbacks of
+HeuristicOracle remain the *semantic* layer — the LM supplies
+classification/coverage signals from its logits where that is meaningful
+at repo scale (the router LM trained by examples/train_router.py).
+
+Division of labor:
+  classify_query — LM-logit route scoring over {ENUMERATE, LOOKUP,
+                   AGGREGATE} prompts (falls back to regex fast path
+                   first, exactly like the paper's hybrid router)
+  needs_deeper   — perplexity-of-query-given-content proxy: mean NLL of
+                   the query tokens conditioned on the page prefix;
+                   high NLL ⇒ page does not cover the query.
+  everything else delegates to the heuristic layer (schema induction
+  stays intent-anchored and deterministic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.oracle import HeuristicOracle, ROUTE_ENUMERATE
+from ..data.tokenizer import HashTokenizer
+from ..models import model as M
+from ..models import transformer as T
+from ..models.config import ModelConfig
+
+
+class ModelOracle(HeuristicOracle):
+    def __init__(self, cfg: ModelConfig, params, tokenizer: HashTokenizer,
+                 mesh=None, seed: int = 0):
+        super().__init__(seed=seed)
+        self.cfg = cfg
+        self.params = params
+        self.tok = tokenizer
+        self._loss = jax.jit(
+            lambda p, b: T.loss_fn(p, b, cfg, mesh))
+
+    def _nll(self, prefix: str, target: str) -> float:
+        ids = self.tok.encode(f"{prefix} {target}")
+        tgt_len = len(self.tok.encode(target, add_special=False))
+        toks = jnp.asarray(ids[:-1], jnp.int32)[None, :]
+        labels = np.full((len(ids) - 1,), -1, np.int32)
+        labels[-tgt_len:] = ids[-tgt_len:]
+        batch = {"tokens": toks, "labels": jnp.asarray(labels)[None, :]}
+        return float(self._loss(self.params, batch))
+
+    def classify_query(self, q):
+        self.calls["classify_query"] += 1
+        # regex fast path (paper: <5 ms layer) …
+        cls = super().classify_query(q)
+        if cls == ROUTE_ENUMERATE:
+            return cls
+        # … then the distilled-classifier path: lowest continuation NLL
+        candidates = {
+            "LOOKUP": "this asks about one specific page",
+            "AGGREGATE": "this asks to combine several pages",
+        }
+        scores = {k: self._nll(q, v) for k, v in candidates.items()}
+        return min(scores, key=scores.get)
+
+    def needs_deeper(self, q, content, theta: float = 0.34) -> bool:
+        self.calls["needs_deeper"] += 1
+        if not content.strip():
+            return True
+        # coverage ∝ −NLL(query | page prefix); calibrate against the
+        # unconditional NLL so theta keeps the paper's [0,1] semantics
+        cond = self._nll(content[:512], q)
+        uncond = self._nll("", q)
+        coverage = max(0.0, min(1.0, (uncond - cond) / max(uncond, 1e-6) + 0.5))
+        return coverage < theta

@@ -1,0 +1,32 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 device
+(the dry-run is the only consumer of the 512-device override)."""
+import os
+import sys
+from pathlib import Path
+
+# allow `pytest tests/` without PYTHONPATH=src
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest  # noqa: E402
+
+from repro.core.oracle import HeuristicOracle  # noqa: E402
+from repro.core.pipeline import ConstructionPipeline, PipelineConfig  # noqa: E402
+from repro.data.corpus import AuthTraceConfig, generate_authtrace  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def corpus_and_questions():
+    return generate_authtrace(AuthTraceConfig(n_docs=64, n_questions=24,
+                                              seed=7))
+
+
+@pytest.fixture(scope="session")
+def built_wiki(corpus_and_questions):
+    docs, questions = corpus_and_questions
+    pipe = ConstructionPipeline(PipelineConfig(), HeuristicOracle())
+    pipe.bootstrap(docs)
+    for i in range(0, len(docs), 16):
+        pipe.ingest(docs[i:i + 16])
+    return pipe, questions

@@ -1,0 +1,88 @@
+"""Three-tier cache (paper §V-C): prewarm, promotion, invalidation,
+bounded footprint."""
+from repro.core import records as R
+from repro.core.cache import LruTtl, TieredCache
+from repro.core.consistency import InvalidationBus, WikiWriter
+from repro.core.store import DictKV, PathStore
+
+
+def _wiki():
+    store = PathStore(DictKV())
+    bus = InvalidationBus()
+    w = WikiWriter(store, bus=bus)
+    w.ensure_root()
+    for d in ("rel", "style"):
+        w.admit(f"/{d}", R.DirRecord(name=d))
+    for i in range(30):
+        w.admit(f"/rel/e{i}", R.FileRecord(name=f"e{i}", text=f"page {i}"))
+    bus.drain()
+    return store, bus, w
+
+
+def test_lru_ttl():
+    clock = {"t": 0.0}
+    c = LruTtl(capacity=3, ttl=10.0, clock=lambda: clock["t"])
+    for i in range(5):
+        c.put(f"k{i}", b"v")
+    assert len(c) == 3 and c.evictions == 2
+    assert c.get("k0") is None            # evicted
+    assert c.get("k4") == b"v"
+    clock["t"] = 11.0
+    assert c.get("k4") is None            # expired
+
+
+def test_prewarm_l1_holds_root_and_dims():
+    store, bus, _ = _wiki()
+    cache = TieredCache(store, bus=bus)
+    n = cache.prewarm()
+    assert n >= 3                          # root + 2 dimensions
+    cache.get("/")
+    cache.get("/rel")
+    assert cache.stats.l1_hits == 2 and cache.stats.misses == 0
+
+
+def test_promotion_and_hit_path():
+    store, bus, _ = _wiki()
+    cache = TieredCache(store, bus=bus)
+    cache.prewarm()
+    assert cache.get("/rel/e5") is not None   # L3 hit, promoted to L2
+    assert cache.stats.l3_hits == 1
+    cache.get("/rel/e5")
+    assert cache.stats.l2_hits == 1
+
+
+def test_invalidation_refreshes_entries():
+    store, bus, w = _wiki()
+    cache = TieredCache(store, bus=bus)
+    cache.prewarm()
+    _, kids = cache.ls("/rel")
+    assert "/rel/new" not in kids
+    w.admit("/rel/new", R.FileRecord(name="new", text="fresh"))
+    bus.drain()                            # Δ elapses
+    _, kids = cache.ls("/rel")             # L1 entry was refreshed
+    assert "/rel/new" in kids
+    rec = cache.get("/rel/new")
+    assert rec.text == "fresh"
+
+
+def test_stale_entry_updated_on_page_rewrite():
+    store, bus, w = _wiki()
+    cache = TieredCache(store, bus=bus)
+    cache.get("/rel/e1")                   # promoted to L2
+    w.update_file("/rel/e1",
+                  lambda r: R.FileRecord(name=r.name, text="rewritten",
+                                         meta=r.meta))
+    bus.drain()
+    assert cache.get("/rel/e1").text == "rewritten"
+
+
+def test_bounded_footprint():
+    """§V-C: resident set bounded by capacity caps, not corpus size."""
+    store, bus, w = _wiki()
+    cache = TieredCache(store, bus=bus, l1_capacity=8, l2_capacity=16)
+    cache.prewarm()
+    for i in range(30):
+        cache.get(f"/rel/e{i}")
+    fp = cache.memory_footprint()
+    assert fp["l1_entries"] <= 8
+    assert fp["l2_entries"] <= 16

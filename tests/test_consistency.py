@@ -1,0 +1,154 @@
+"""Theorem 2 (no partial reads) + OCC + invalidation — property-based.
+
+The Theorem 2 test drives the *stepwise* writer so hypothesis can place
+reader operations between the child write and the parent update (every
+schedule of the two-step protocol), asserting the skip-on-miss reader
+never returns an advertised-but-missing child.
+"""
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import paths as P
+from repro.core import records as R
+from repro.core.consistency import (CASConflict, ConsistentReader,
+                                    InvalidationBus, WikiWriter)
+from repro.core.store import DictKV, PathStore
+
+
+def _fresh():
+    store = PathStore(DictKV())
+    bus = InvalidationBus()
+    w = WikiWriter(store, bus=bus)
+    w.ensure_root()
+    w.admit("/d", R.DirRecord(name="d"))
+    return store, bus, w
+
+
+def _check_no_partial(reader: ConsistentReader, path: str):
+    out = reader.ls(path)
+    if out is None:
+        return
+    _, resolved = out
+    for cp, crec in resolved:
+        assert crec is not None  # skip-on-miss never yields ⊥ children
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.sampled_from(["reader_ls", "reader_get"]),
+                min_size=0, max_size=4),
+       st.integers(0, 3))
+def test_theorem2_interleavings(reads_between, n_new):
+    """Interleave reads at every point of the two-step admission."""
+    store, _, w = _fresh()
+    reader = ConsistentReader(store)
+    for i in range(n_new):
+        steps = w.admit_steps(f"/d/e{i}", R.FileRecord(name=f"e{i}", text="x"))
+        next(steps)                      # step 1: child written, unlinked
+        for op in reads_between:
+            if op == "reader_ls":
+                _check_no_partial(reader, "/d")
+            else:
+                reader.get(f"/d/e{i}")
+        # invariant mid-protocol: either unadvertised or fully readable
+        _check_no_partial(reader, "/d")
+        next(steps, None)                # step 2: parent updated
+        _check_no_partial(reader, "/d")
+        # R1 read-after-write: once admitted, the child is listed
+        _, resolved = reader.ls("/d")
+        assert f"/d/e{i}" in [cp for cp, _ in resolved]
+
+
+def test_orphan_is_harmless():
+    """A failed parent update leaves an unadvertised orphan (paper §IV-C)."""
+    store, _, w = _fresh()
+    reader = ConsistentReader(store)
+    steps = w.admit_steps("/d/orphan", R.FileRecord(name="orphan"))
+    next(steps)                          # child written; never link parent
+    _, resolved = reader.ls("/d")
+    assert "/d/orphan" not in [cp for cp, _ in resolved]
+    assert reader.get("/d/orphan") is not None   # directly addressable
+
+
+def test_unlink_reverse_order():
+    store, _, w = _fresh()
+    reader = ConsistentReader(store)
+    w.admit("/d/e", R.FileRecord(name="e"))
+    w.unlink("/d/e")
+    _check_no_partial(reader, "/d")
+    assert reader.get("/d/e") is None
+    _, resolved = reader.ls("/d")
+    assert resolved == []
+
+
+def test_occ_version_cas():
+    store, _, w = _fresh()
+    w.admit("/d/e", R.FileRecord(name="e", text="v0"))
+
+    def bump(rec):
+        return R.FileRecord(name=rec.name, text=rec.text + "+",
+                            meta=rec.meta)
+
+    r1 = w.update_file("/d/e", bump)
+    assert r1.meta.version == 1
+    r2 = w.update_file("/d/e", bump)
+    assert r2.meta.version == 2 and r2.text == "v0++"
+
+
+def test_occ_concurrent_counter():
+    """N threads increment one counter page through CAS; no lost updates."""
+    store, _, w = _fresh()
+    w.admit("/d/cnt", R.FileRecord(name="cnt", text="0"))
+
+    def worker():
+        for _ in range(25):
+            w.update_file(
+                "/d/cnt",
+                lambda r: R.FileRecord(name=r.name,
+                                       text=str(int(r.text) + 1),
+                                       meta=r.meta),
+                max_retries=200)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert store.get("/d/cnt").text == "100"
+    assert store.get("/d/cnt").meta.version == 100
+
+
+def test_invalidation_bounded_staleness():
+    """R3: after drain (Δ), the new state is universally visible."""
+    store, bus, w = _fresh()
+    seen = []
+    bus.subscribe(lambda ev: seen.append(ev.path))
+    w.admit("/d/e", R.FileRecord(name="e"))
+    assert bus.pending() > 0
+    n = bus.drain()
+    assert n >= 2                         # child + parent events
+    assert "/d/e" in seen and "/d" in seen
+    assert bus.pending() == 0
+
+
+def test_cas_exhaustion_raises():
+    store, _, w = _fresh()
+    w.admit("/d/e", R.FileRecord(name="e", text="x"))
+
+    real_get = store.get
+    # adversarial store: version changes under the writer every read
+    state = {"n": 0}
+
+    def flaky_get(path):
+        rec = real_get(path)
+        if path == "/d/e" and isinstance(rec, R.FileRecord):
+            state["n"] += 1
+            from dataclasses import replace
+            return replace(rec, meta=replace(rec.meta,
+                                             version=state["n"] * 1000))
+        return rec
+
+    store.get = flaky_get
+    with pytest.raises(CASConflict):
+        w.update_file("/d/e", lambda r: r, max_retries=3)

@@ -1,0 +1,44 @@
+"""ModelOracle: a zoo LM behind the Oracle interface, driving NAV."""
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.navigate import Navigator, UnitBudget, check_progressive
+from repro.core.oracle import ROUTE_ENUMERATE
+from repro.data.tokenizer import HashTokenizer
+from repro.models import model as M
+from repro.runtime.model_oracle import ModelOracle
+
+
+def _oracle():
+    cfg = get_config("wikikv-router").reduced(d_model=32, vocab=512,
+                                              n_layers=2)
+    tok = HashTokenizer(vocab_size=cfg.vocab).fit(
+        ["the quick brown fox jumps over the lazy dog " * 4])
+    params = M.init_params(cfg, seed=0)
+    return ModelOracle(cfg, params, tok)
+
+
+def test_classify_regex_fast_path():
+    o = _oracle()
+    assert o.classify_query("Which dimensions exist?") == ROUTE_ENUMERATE
+
+
+def test_classify_lm_path_deterministic():
+    o = _oracle()
+    c1 = o.classify_query("tell me about the estrangement")
+    c2 = o.classify_query("tell me about the estrangement")
+    assert c1 == c2 and c1 in ("LOOKUP", "AGGREGATE")
+
+
+def test_needs_deeper_empty_content():
+    o = _oracle()
+    assert o.needs_deeper("anything at all", "") is True
+
+
+def test_model_oracle_drives_nav(built_wiki):
+    pipe, questions = built_wiki
+    o = _oracle()
+    nav = Navigator(pipe.store, o)
+    results, trace = nav.nav(questions[0].text, UnitBudget(200))
+    assert check_progressive(results)
+    assert trace.tool_calls > 0

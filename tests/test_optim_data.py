@@ -1,0 +1,152 @@
+"""Optimizer (incl. int8 moments + compression) and data substrates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.corpus import (AuthTraceConfig, bucket, generate_authtrace,
+                               score_answer)
+from repro.data.pipeline import DataPipeline
+from repro.data.tokenizer import HashTokenizer
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import compress_grads, decompress_grads
+from repro.optim.schedule import cosine_schedule
+
+
+def _tiny_params(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "w": jax.random.normal(k, (300, 40)),          # quantizable ≥ 2D
+        "b": jnp.zeros((40,)),
+    }
+
+
+def test_adamw_reference_behavior():
+    params = _tiny_params()
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.0)
+    opt = adamw_init(params, cfg)
+    g = jax.tree.map(jnp.ones_like, params)
+    p2, opt2 = adamw_update(params, g, opt, cfg)
+    # first Adam step ≈ -lr * sign(g) with bias correction
+    delta = np.asarray(p2["b"] - params["b"])
+    np.testing.assert_allclose(delta, -1e-2, rtol=1e-3)
+    assert int(opt2["step"]) == 1
+
+
+def test_int8_moments_track_f32():
+    """Quantized-moment AdamW stays close to the f32 trajectory."""
+    def run(state_dtype, steps=20):
+        params = {"w": jnp.ones((512, 256)) * 0.5}
+        cfg = AdamWConfig(lr=1e-2, state_dtype=state_dtype, weight_decay=0.0)
+        opt = adamw_init(params, cfg)
+        k = jax.random.PRNGKey(0)
+        for i in range(steps):
+            g = {"w": jax.random.normal(jax.random.fold_in(k, i),
+                                        (512, 256)) * 0.1 + 0.05}
+            params, opt = adamw_update(params, g, opt, cfg)
+        return np.asarray(params["w"])
+
+    ref = run("float32")
+    q = run("int8")
+    # trajectories agree to within a few percent of the update magnitude
+    assert np.abs(ref - q).mean() < 0.02 * np.abs(ref - 0.5).mean() + 1e-3
+
+
+def test_int8_state_is_small():
+    params = {"w": jnp.ones((1024, 512))}
+    opt = adamw_init(params, AdamWConfig(state_dtype="int8"))
+    m = opt["m"]["w"]
+    assert m["q"].dtype == jnp.int8 and m["q"].shape == (1024, 512)
+    assert m["scale"].shape == (1024,)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_compression_error_feedback(seed):
+    """EF property: quantization error is carried, so the *sum* of
+    decompressed grads tracks the sum of true grads."""
+    k = jax.random.PRNGKey(seed)
+    true_sum = jnp.zeros((64, 33))
+    sent_sum = jnp.zeros((64, 33))
+    resid = None
+    for i in range(6):
+        g = {"w": jax.random.normal(jax.random.fold_in(k, i), (64, 33))}
+        comp, resid = compress_grads(g, resid)
+        deq = decompress_grads(comp)
+        true_sum = true_sum + g["w"]
+        sent_sum = sent_sum + deq["w"]
+    err = jnp.abs(true_sum - sent_sum).max()
+    # bounded by one quantization step, not accumulating over rounds
+    assert float(err) < 0.1, float(err)
+
+
+def test_schedule_shape():
+    # first step trains at lr/warmup, not zero
+    first = float(cosine_schedule(0, warmup=10, total=100))
+    assert 0.05 < first <= 0.101   # 1/warmup (f32)
+    assert float(cosine_schedule(10, warmup=10, total=100)) >= 0.99
+    end = float(cosine_schedule(100, warmup=10, total=100))
+    assert 0.05 < end < 0.15
+
+
+# ---------------------------------------------------------------------------
+def test_corpus_determinism_and_buckets():
+    cfg = AuthTraceConfig(n_docs=40, n_questions=30, seed=11)
+    d1, q1 = generate_authtrace(cfg)
+    d2, q2 = generate_authtrace(cfg)
+    assert [d["text"] for d in d1] == [d["text"] for d in d2]
+    assert [q.text for q in q1] == [q.text for q in q2]
+    buckets = {bucket(q) for q in q1}
+    assert buckets == {"single", "low_multi", "high_multi"}
+    # every fact shard is really placed in its fan-in many docs
+    by_id = {d["id"]: d for d in d1}
+    for q in q1:
+        assert len(q.doc_ids) == q.fan_in
+        for did, shard in zip(q.doc_ids, q.answer_shards):
+            assert shard in by_id[did]["text"].lower()
+
+
+def test_scoring_pack_level():
+    _, qs = generate_authtrace(AuthTraceConfig(n_docs=30, n_questions=10))
+    q = next(x for x in qs if x.fan_in >= 2)
+    full = " ".join(q.answer_shards)
+    partial = q.answer_shards[0]
+    assert score_answer(full, q) == 1.0
+    assert score_answer(partial, q) == 0.0
+
+
+def test_tokenizer_roundtrip():
+    tok = HashTokenizer(vocab_size=512).fit(["the quick brown fox " * 8])
+    ids = tok.encode("the quick fox")
+    assert ids[0] == 1 and ids[-1] == 2
+    assert all(0 <= i < 512 for i in ids)
+    assert "quick" in tok.decode(ids)
+
+
+def test_pipeline_resume_exact():
+    """Crash-restart determinism: resume from a snapshot replays the exact
+    same batch sequence."""
+    docs = [list(range(5 + i, 50 + i)) for i in range(20)]
+    p1 = DataPipeline(docs, seq_len=16, global_batch=4, seed=5)
+    batches = [p1.next_batch() for _ in range(6)]
+    snap = None
+    p2 = DataPipeline(docs, seq_len=16, global_batch=4, seed=5)
+    for i in range(3):
+        p2.next_batch()
+    snap = p2.snapshot()
+    p3 = DataPipeline(docs, seq_len=16, global_batch=4, seed=5)
+    p3.restore(snap)
+    for i in range(3, 6):
+        b = p3.next_batch()
+        np.testing.assert_array_equal(b["tokens"], batches[i]["tokens"])
+
+
+def test_pipeline_dp_sharding_partitions_batch():
+    docs = [list(range(100))] * 8
+    full = DataPipeline(docs, seq_len=8, global_batch=4, seed=1)
+    shards = [DataPipeline(docs, seq_len=8, global_batch=4, seed=1,
+                           dp_rank=r, dp_size=2) for r in range(2)]
+    b_full = full.next_batch()
+    parts = [s.next_batch() for s in shards]
+    stacked = np.concatenate([p["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(b_full["tokens"], stacked)

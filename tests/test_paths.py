@@ -1,0 +1,82 @@
+"""Path-as-key encoding laws (paper §IV-A) — property-based."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import paths as P
+
+segment = st.text(
+    alphabet=st.characters(blacklist_characters="/\x00",
+                           blacklist_categories=("Cs",)),
+    min_size=1, max_size=12,
+).filter(lambda s: s.strip() and s not in (".", ".."))
+
+path_strategy = st.lists(segment, min_size=0, max_size=5).map(
+    lambda segs: "/" + "/".join(segs))
+
+
+@given(path_strategy)
+def test_normalize_idempotent(p):
+    n = P.normalize(p)
+    assert P.normalize(n) == n
+
+
+@given(path_strategy)
+def test_normalize_no_trailing_slash(p):
+    n = P.normalize(p)
+    assert n == "/" or not n.endswith("/")
+
+
+@given(st.lists(segment, min_size=1, max_size=5))
+def test_parent_child_roundtrip(segs):
+    p = P.normalize("/" + "/".join(segs))
+    for seg in ["x1", "y_2"]:
+        c = P.child(p, seg)
+        assert P.parent(c) == p
+        assert P.basename(c) == seg
+
+
+@given(path_strategy, path_strategy)
+def test_prefix_segment_aware(a, b):
+    a, b = P.normalize(a), P.normalize(b)
+    if P.is_prefix(a, b):
+        assert b == a or b.startswith(a + "/") or a == "/"
+
+
+def test_prefix_not_substring():
+    assert P.is_prefix("/a", "/a/b")
+    assert not P.is_prefix("/a", "/ab")
+    assert P.is_prefix("/", "/anything")
+
+
+@given(path_strategy)
+def test_hash_deterministic_and_64bit(p):
+    n = P.normalize(p)
+    h1, h2 = P.path_hash(n), P.path_hash(n)
+    assert h1 == h2
+    assert 0 <= h1 < 2 ** 64
+    assert len(P.key_bytes(n)) == 8
+
+
+@given(st.lists(path_strategy, min_size=2, max_size=20, unique=True))
+def test_hash_collision_free_smallsets(ps):
+    norm = {P.normalize(p) for p in ps}
+    hashes = {P.path_hash(p) for p in norm}
+    assert len(hashes) == len(norm)
+
+
+def test_depth_budget_enforced():
+    with pytest.raises(P.PathError):
+        P.normalize("/a/b/c/d/e/f")          # depth 6 > D=5
+    P.normalize("/a/b/c/d/e")                # depth 5 ok
+
+
+def test_node_type_binding():
+    assert P.node_type("/") == P.NODE_INDEX
+    assert P.node_type("/dim") == P.NODE_DIMENSION
+    assert P.node_type("/dim/ent") == P.NODE_ENTITY
+    assert P.node_type("/sources/digests/t") == P.NODE_DIGEST
+    assert P.node_type("/sources/articles/t") == P.NODE_DOCUMENT
+
+
+def test_ancestors_order():
+    assert list(P.ancestors("/a/b/c")) == ["/", "/a", "/a/b"]

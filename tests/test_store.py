@@ -1,0 +1,105 @@
+"""Storage engines + the four query operators across backends."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import paths as P
+from repro.core import records as R
+from repro.core.backends import ALL_BACKENDS
+from repro.core.store import DictKV, MemKV, PathStore
+
+
+def _mini_wiki():
+    items = [
+        ("/", R.DirRecord(name="", sub_dirs=["rel", "style"])),
+        ("/rel", R.DirRecord(name="rel", files=["lu_xun", "zhou"])),
+        ("/style", R.DirRecord(name="style", files=["satire"])),
+        ("/rel/lu_xun", R.FileRecord(name="lu_xun", text="the author")),
+        ("/rel/zhou", R.FileRecord(name="zhou", text="the brother")),
+        ("/style/satire", R.FileRecord(name="satire", text="sharp prose")),
+    ]
+    return items
+
+
+def test_memkv_lsm_semantics():
+    kv = MemKV(memtable_limit=4, auto_compact_runs=2)
+    for i in range(20):
+        kv.put(f"k{i:03d}".encode(), f"v{i}".encode())
+    assert kv.get(b"k005") == b"v5"
+    kv.delete(b"k005")
+    assert kv.get(b"k005") is None          # tombstone across runs
+    kv.put(b"k005", b"v5b")
+    assert kv.get(b"k005") == b"v5b"        # newest wins
+    got = dict(kv.scan(b"k01"))
+    assert set(got) == {f"k{i:03d}".encode() for i in range(10, 20)}
+    kv.compact()
+    assert kv.get(b"k005") == b"v5b"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 50), st.binary(max_size=8)),
+                min_size=1, max_size=60),
+       st.lists(st.integers(0, 50), max_size=10))
+def test_memkv_matches_dict(puts, deletes):
+    kv = MemKV(memtable_limit=5, auto_compact_runs=3)
+    ref = {}
+    for k, v in puts:
+        kb = f"{k:04d}".encode()
+        kv.put(kb, v)
+        ref[kb] = v
+    for k in deletes:
+        kb = f"{k:04d}".encode()
+        kv.delete(kb)
+        ref.pop(kb, None)
+    for kb in {f"{k:04d}".encode() for k, _ in puts}:
+        assert kv.get(kb) == ref.get(kb)
+    assert [k for k, _ in kv.scan(b"")] == sorted(ref)
+
+
+def test_pathstore_q1_q2_q3_q4():
+    ps = PathStore(MemKV())
+    for path, rec in _mini_wiki():
+        ps.put_record(path, rec)
+    # Q1
+    rec = ps.get("/rel/lu_xun")
+    assert isinstance(rec, R.FileRecord) and rec.text == "the author"
+    assert ps.get("/missing") is None
+    # Q2 ≡ one point lookup: children come from the directory record
+    rec, kids = ps.ls("/rel")
+    assert kids == ["/rel/lu_xun", "/rel/zhou"]
+    # Q3: one record per level
+    chain = ps.navigate("/rel/lu_xun")
+    assert len(chain) == 3
+    # Q4: segment-aware prefix
+    assert ps.search("/rel") == ["/rel", "/rel/lu_xun", "/rel/zhou"]
+    assert ps.search("/re") == []           # "/re" is not a segment prefix
+    assert ps.count() == 6
+
+
+@pytest.mark.parametrize("name", sorted(ALL_BACKENDS))
+def test_backends_agree(name):
+    be = ALL_BACKENDS[name]()
+    try:
+        be.load(_mini_wiki())
+        rec = be.q1_get("/rel/zhou")
+        assert isinstance(rec, R.FileRecord) and rec.text == "the brother"
+        assert be.q1_get("/nope") is None
+        kids = be.q2_ls("/rel")
+        assert sorted(kids) == ["/rel/lu_xun", "/rel/zhou"]
+        assert len(be.q3_navigate("/style/satire")) == 3
+        hits = be.q4_search("/rel")
+        assert set(hits) >= {"/rel", "/rel/lu_xun", "/rel/zhou"}
+        assert "/style/satire" not in hits
+    finally:
+        be.close()
+
+
+def test_q2_is_single_point_lookup():
+    """The paper's O(1) claim: LS must not scan the keyspace."""
+    ps = PathStore(DictKV())
+    for path, rec in _mini_wiki():
+        ps.put_record(path, rec)
+    before = ps.engine.op_counts()
+    ps.ls("/rel")
+    after = ps.engine.op_counts()
+    assert after.get("get", 0) - before.get("get", 0) == 1
+    assert after.get("scan", 0) == before.get("scan", 0)

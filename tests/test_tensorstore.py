@@ -1,0 +1,76 @@
+"""Device-resident tensorized path index ≡ host PathStore (property)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import paths as P
+from repro.core import records as R
+from repro.core import tensorstore as TS
+from repro.core.store import DictKV, PathStore
+
+seg = st.text(alphabet="abcdefgh_", min_size=1, max_size=6)
+
+
+def _store_from_paths(paths):
+    ps = PathStore(DictKV())
+    ps.put_record("/", R.DirRecord(name=""))
+    for p in paths:
+        rec = (R.DirRecord(name=P.basename(p)) if P.depth(p) < 2
+               else R.FileRecord(name=P.basename(p), text="t"))
+        ps.put_record(p, rec)
+    return ps
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sets(st.builds(lambda a, b: f"/{a}/{b}", seg, seg),
+               min_size=1, max_size=24))
+def test_lookup_roundtrip(paths):
+    norm = sorted({P.normalize(p) for p in paths})
+    dims = sorted({P.parent(p) for p in norm})
+    ps = _store_from_paths(dims + norm)
+    wiki = TS.freeze(ps)
+    rows = TS.batched_get(wiki, wiki.paths)
+    assert all(wiki.paths[r] == p for r, p in zip(rows, wiki.paths))
+    miss = TS.batched_get(wiki, ["/definitely/not_here"])
+    assert miss[0] == -1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sets(st.builds(lambda a, b: f"/{a}/{b}", seg, seg),
+               min_size=1, max_size=20),
+       seg)
+def test_prefix_search_matches_host(paths, probe):
+    norm = sorted({P.normalize(p) for p in paths})
+    dims = sorted({P.parent(p) for p in norm})
+    ps = _store_from_paths(dims + norm)
+    wiki = TS.freeze(ps)
+    prefix = "/" + probe
+    host = set(ps.search(prefix))
+    dev = set(TS.search_prefix(wiki, prefix))
+    assert dev == host
+
+
+def test_ls_rows_matches_children(built_wiki):
+    pipe, _ = built_wiki
+    wiki = TS.freeze(pipe.store)
+    root_row = int(TS.batched_get(wiki, ["/"])[0])
+    kid_rows = TS.ls_rows(wiki, root_row)
+    kid_paths = {wiki.paths[r] for r in kid_rows}
+    _, host_kids = pipe.store.ls("/")
+    assert kid_paths == set(host_kids)
+
+
+def test_navigate_rows(built_wiki):
+    pipe, _ = built_wiki
+    wiki = TS.freeze(pipe.store)
+    ent = next(p for p in pipe.store.all_paths()
+               if P.node_type(p) == P.NODE_ENTITY and not P.is_reserved(p))
+    rows = TS.navigate_rows(wiki, ent)
+    assert rows[-1] >= 0 and wiki.paths[rows[-1]] == ent
+    assert rows[0] >= 0 and wiki.paths[rows[0]] == "/"
+
+
+def test_pinned_prefix_counts_dimensions(built_wiki):
+    pipe, _ = built_wiki
+    wiki = TS.freeze(pipe.store)
+    n_dims = sum(1 for p in pipe.store.all_paths() if P.depth(p) <= 1)
+    assert wiki.n_pinned == n_dims
