@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV (plus # section headers).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run table4     # one table
+    PYTHONPATH=src python -m benchmarks.run --smoke    # cheap CI subset
 """
 from __future__ import annotations
 
@@ -34,8 +35,23 @@ ALL = {
 }
 
 
+#: reduced-size runs for CI (scripts/smoke.sh): exercises the engine
+#: layer end-to-end — backend sweep incl. host-sharded + device engines,
+#: and the batched online path — in well under a minute
+SMOKE = {
+    "table2": lambda: table2_backends.run(n_iters=50, warmup=10),
+    "table5": lambda: table5_online.run(n_queries=128),
+}
+
+
 def main() -> None:
-    which = sys.argv[1:] or list(ALL)
+    args = sys.argv[1:]
+    if args and args[0] == "--smoke":
+        for name, fn in SMOKE.items():
+            print(f"\n##### {name} (smoke) #####")
+            fn()
+        return
+    which = args or list(ALL)
     for name in which:
         if name not in ALL:
             print(f"unknown benchmark {name!r}; have {sorted(ALL)}")

@@ -3,10 +3,17 @@
 The production study's system-side metrics, reproduced on the serving
 stack: 1,000 queries sampled from the question log (with paraphrase
 noise), full online path router → navigation → (oracle) generation.
-Reports Avg/P50/P95/P99 of wiki tool calls, wiki tool latency, and
-end-to-end latency, plus a 3-level quality proxy (3 = pack-exact,
-2 = partial shard coverage, 1 = no shard surfaced) standing in for the
-human rubric.
+
+Navigation runs through the batched QueryEngine (core/engine.py): the
+query mix is served in WAVES of concurrent sessions whose Q1–Q4
+operations are continuously batched by the BatchPlanner — one engine
+call per operator per round.  Reports Avg/P50/P95/P99 of wiki tool
+calls, amortized wiki tool latency, and end-to-end latency, a 3-level
+quality proxy (3 = pack-exact, 2 = partial shard coverage, 1 = no shard
+surfaced), plus the engine amortization evidence: round trips, logical
+ops, and the largest Q1 batch a single engine call executed (the ISSUE 1
+acceptance floor is ≥ 64).  A second pass reports the DeviceEngine
+(Pallas Q1/Q4 path) on the same mix.
 """
 from __future__ import annotations
 
@@ -18,53 +25,116 @@ import numpy as np
 from common import build_wiki, emit
 
 from repro.core.cache import TieredCache
-from repro.core.navigate import Navigator, WallClockBudget
+from repro.core.engine import DeviceEngine, HostEngine, ShardedPathStore
+from repro.core.navigate import Navigator, UnitBudget
 from repro.core.oracle import HeuristicOracle
 from repro.data.corpus import score_answer
+
+WAVE = 256  # concurrent navigation sessions per planner wave
 
 
 def _pct(xs, p):
     return float(np.percentile(np.asarray(xs), p))
 
 
-def run(seed: int = 0, n_queries: int = 1000):
-    pipe, docs, questions = build_wiki(n_docs=160, n_questions=100,
-                                       seed=seed)
-    cache = TieredCache(pipe.store, bus=pipe.bus)
+def _sharded_copy(store) -> ShardedPathStore:
+    """Re-shard the pipeline store by digest range (4 shards)."""
+    sh = ShardedPathStore(n_shards=4)
+    for p in store.all_paths():
+        rec = store.get(p)
+        if rec is not None:
+            sh.put_record(p, rec)
+    sh.flush()
+    return sh
+
+
+def _run_engine(tag: str, engine, store, bus, questions, rng,
+                n_queries: int) -> list[tuple]:
+    cache = TieredCache(store, bus=bus)
     cache.prewarm()
-    nav = Navigator(pipe.store, HeuristicOracle(), cache=cache)
+    nav = Navigator(engine, HeuristicOracle(), cache=cache)
     oracle = HeuristicOracle()
-    rng = random.Random(seed)
-    tool_calls, tool_lat, e2e_lat, quality = [], [], [], []
+    texts, qobjs = [], []
     for i in range(n_queries):
         q = questions[rng.randrange(len(questions))]
-        text = q.text if i % 3 else ("tell me, " + q.text.lower())
+        texts.append(q.text if i % 3 else ("tell me, " + q.text.lower()))
+        qobjs.append(q)
+
+    tool_calls, tool_lat, e2e_lat, quality = [], [], [], []
+    for w0 in range(0, n_queries, WAVE):
+        wave = texts[w0:w0 + WAVE]
         t0 = time.perf_counter()
-        results, trace = nav.nav(text, WallClockBudget(50.0))
+        outs = nav.nav_many(wave, [UnitBudget(400) for _ in wave])
         t1 = time.perf_counter()
-        answer = oracle.answer(text, [r.text for r in results])
-        t2 = time.perf_counter()
-        tool_calls.append(trace.tool_calls)
-        tool_lat.append((t1 - t0) * 1000)
-        e2e_lat.append((t2 - t0) * 1000)
-        if score_answer(answer, q) == 1.0:
-            quality.append(3)
-        elif any(s.lower() in answer.lower() for s in q.answer_shards):
-            quality.append(2)
-        else:
-            quality.append(1)
+        wave_ms = (t1 - t0) * 1000
+        # a session completes after trace.rounds planner rounds; its wall
+        # latency under continuous batching is that fraction of the wave,
+        # so the percentile rows reflect real per-query variation (deep
+        # NEEDSDEEPER chains stay live for more rounds)
+        max_rounds = max((t.rounds for _, t in outs), default=1) or 1
+        for (results, trace), text, qobj in zip(outs, wave,
+                                                qobjs[w0:w0 + WAVE]):
+            per_q_nav = wave_ms * trace.rounds / max_rounds
+            ta = time.perf_counter()
+            # answer from the same (possibly paraphrased) text that drove
+            # navigation — the protocol's paraphrase noise stays in scoring
+            answer = oracle.answer(text, [r.text for r in results])
+            tb = time.perf_counter()
+            tool_calls.append(trace.tool_calls)
+            tool_lat.append(per_q_nav)
+            e2e_lat.append(per_q_nav + (tb - ta) * 1000)
+            if score_answer(answer, qobj) == 1.0:
+                quality.append(3)
+            elif any(s.lower() in answer.lower() for s in qobj.answer_shards):
+                quality.append(2)
+            else:
+                quality.append(1)
+
     rows = []
     for name, xs, unit in (("tool_calls", tool_calls, "count"),
                            ("tool_latency", tool_lat, "ms"),
                            ("e2e_latency", e2e_lat, "ms")):
-        rows.append((f"table5_{name}_avg", round(float(np.mean(xs)), 3), unit))
+        rows.append((f"table5_{tag}_{name}_avg",
+                     round(float(np.mean(xs)), 3), unit))
         for p in (50, 95, 99):
-            rows.append((f"table5_{name}_p{p}", round(_pct(xs, p), 3), unit))
-    rows.append(("table5_quality_mean", round(float(np.mean(quality)), 3),
-                 "rating_1_3"))
-    rows.append(("table5_cache_hit_rate", round(cache.stats.hit_rate(), 3),
-                 "fraction"))
-    emit(rows, header="Table V: online latency + quality on 1000 queries")
+            rows.append((f"table5_{tag}_{name}_p{p}",
+                         round(_pct(xs, p), 3), unit))
+    rows.append((f"table5_{tag}_quality_mean",
+                 round(float(np.mean(quality)), 3), "rating_1_3"))
+    rows.append((f"table5_{tag}_cache_hit_rate",
+                 round(cache.stats.hit_rate(), 3), "fraction"))
+    # engine amortization: the batched-Q1 acceptance evidence.
+    # "served" = logical lookups resolved by one engine call (concurrent
+    # sessions' identical ops share a batch slot); "keys" = unique keys
+    # the call actually executed.
+    st = engine.stats
+    rows.append((f"table5_{tag}_engine_round_trips", st.total_calls(),
+                 f"count;ops={st.total_ops()}"))
+    rows.append((f"table5_{tag}_engine_q1_max_lookups_per_call",
+                 st.max_served.get("q1_get", 0),
+                 f"lookups;unique_keys_max={st.max_batch.get('q1_get', 0)}"))
+    q1_calls = st.calls.get("q1_get", 1)
+    rows.append((f"table5_{tag}_engine_q1_avg_lookups_per_call",
+                 round(st.served.get("q1_get", 0) / max(q1_calls, 1), 2),
+                 f"lookups;unique_keys_avg="
+                 f"{round(st.ops.get('q1_get', 0) / max(q1_calls, 1), 2)}"))
+    return rows
+
+
+def run(seed: int = 0, n_queries: int = 1000):
+    pipe, docs, questions = build_wiki(n_docs=160, n_questions=100,
+                                       seed=seed)
+    rows = []
+    # host engine over the digest-range sharded store (4 shards)
+    sharded = _sharded_copy(pipe.store)
+    rows += _run_engine("host", HostEngine(sharded), sharded, None,
+                        questions, random.Random(seed), n_queries)
+    # device engine frozen from the same store (Pallas Q1/Q4 on TPU)
+    dev = DeviceEngine.from_store(pipe.store)
+    rows += _run_engine("device", dev, pipe.store, pipe.bus,
+                        questions, random.Random(seed), n_queries)
+    emit(rows, header="Table V: online latency + quality on "
+                      f"{n_queries} queries (waves of {WAVE})")
     return rows
 
 

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# CI smoke: tier-1 tests + a cheap benchmark pass over the engine layer.
+# Mirrors the ROADMAP tier-1 verify command; pyproject.toml makes the
+# bare pytest invocation work without PYTHONPATH.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark smoke (engine layer) =="
+PYTHONPATH=src python -m benchmarks.run --smoke

@@ -1,11 +1,14 @@
 """WikiKV core: the paper's contribution as a composable library.
 
 Import graph (bottom-up): paths → records → store → {backends, consistency,
-cache, schema} → {coldstart, evolution, errorbook} → pipeline → navigate;
-tensorstore is the device-resident (JAX) realization of the same contracts.
+cache, schema} → engine → {coldstart, evolution, errorbook} → pipeline →
+navigate; tensorstore is the device-resident (JAX) realization of the same
+contracts and engine.DeviceEngine the batched execution layer over it.
 """
 from . import paths, records  # noqa: F401
 from .store import DictKV, KVEngine, MemKV, PathStore  # noqa: F401
+from .engine import (BatchPlanner, DeviceEngine, EngineStats,  # noqa: F401
+                     HostEngine, QueryEngine, ShardedPathStore)
 from .consistency import (CASConflict, ConsistentReader, Invalidation,  # noqa: F401
                           InvalidationBus, WikiWriter)
 from .cache import TieredCache  # noqa: F401

@@ -31,6 +31,7 @@ from typing import Optional, Sequence
 
 from . import paths as P
 from . import records as R
+from .engine import DeviceEngine, HostEngine, ShardedPathStore
 from .store import MemKV, PathStore
 
 
@@ -57,28 +58,68 @@ class Backend:
 
 
 class WikiKVBackend(Backend):
+    """Path-as-key layout, served through the unified ``QueryEngine``
+    (core/engine.py).  Variants differ only in the engine behind the same
+    Q1–Q4 contract:
+
+    * ``wikikv``         — HostEngine over one MemKV LSM (the paper's layout)
+    * ``wikikv_sharded`` — HostEngine over the digest-range ShardedPathStore
+    * ``wikikv_device``  — DeviceEngine over the frozen tensor index
+                           (Pallas Q1/Q4 on TPU, jnp reference elsewhere)
+    """
+
     name = "wikikv"
+    engine_kind = "host"
+    n_shards = 1
 
     def __init__(self):
-        self.store = PathStore(MemKV())
+        if self.n_shards > 1:
+            self.store = ShardedPathStore(n_shards=self.n_shards)
+        else:
+            self.store = PathStore(MemKV())
+        self.engine = None
 
     def load(self, items):
         for path, rec in items:
             self.store.put_record(path, rec)
-        self.store.engine.flush()
+        if isinstance(self.store, ShardedPathStore):
+            self.store.flush()
+        else:
+            self.store.engine.flush()
+        if self.engine_kind == "device":
+            self.engine = DeviceEngine.from_store(self.store)
+        else:
+            self.engine = HostEngine(self.store)
 
     def q1_get(self, path):
-        return self.store.get(path)
+        return self.engine.q1_get([path])[0]
 
     def q2_ls(self, path):
-        out = self.store.ls(path)
+        out = self.engine.q2_ls([path])[0]
         return None if out is None else out[1]
 
     def q3_navigate(self, path):
-        return self.store.navigate(path)
+        return self.engine.q3_navigate([path])[0]
 
     def q4_search(self, prefix):
-        return self.store.search(prefix)
+        return self.engine.q4_search([prefix])[0]
+
+    # batched entry points (the Table II amortization rows)
+    def q1_get_batch(self, paths):
+        return self.engine.q1_get(paths)
+
+    def q4_search_batch(self, prefixes):
+        return self.engine.q4_search(prefixes)
+
+
+class WikiKVShardedBackend(WikiKVBackend):
+    name = "wikikv_sharded"
+    n_shards = 4
+
+
+class WikiKVDeviceBackend(WikiKVBackend):
+    name = "wikikv_device"
+    engine_kind = "device"
 
 
 class FSBackend(Backend):
@@ -311,6 +352,8 @@ class GraphBackend(Backend):
 
 ALL_BACKENDS = {
     "wikikv": WikiKVBackend,
+    "wikikv_sharded": WikiKVShardedBackend,
+    "wikikv_device": WikiKVDeviceBackend,
     "fs": FSBackend,
     "sql": SQLBackend,
     "graph": GraphBackend,

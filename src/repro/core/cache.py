@@ -145,6 +145,32 @@ class TieredCache:
             return None
         return rec, [P.child(path, s) for s in rec.children()]
 
+    # -- split read path for the batched engine (core/engine.py) ----------
+    def peek(self, path: str) -> Optional[R.Record]:
+        """L1/L2 probe only — never touches L3.  A ``None`` means "not
+        cached": the caller routes the miss through its batched engine and
+        reports the result back via ``admit``."""
+        path = P.normalize(path, depth_budget=self.store.depth_budget)
+        raw = self.l1.get(path)
+        if raw is not None:
+            self.stats.l1_hits += 1
+            return R.decode(raw)
+        raw = self.l2.get(path)
+        if raw is not None:
+            self.stats.l2_hits += 1
+            return R.decode(raw)
+        return None
+
+    def admit(self, path: str, rec: Optional[R.Record]) -> None:
+        """Account + promote an engine-resolved read (the L3 half of
+        ``get`` when the fetch itself ran through a batched engine)."""
+        path = P.normalize(path, depth_budget=self.store.depth_budget)
+        if rec is None:
+            self.stats.misses += 1
+            return
+        self.stats.l3_hits += 1
+        self._promote(path, rec)
+
     def _promote(self, path: str, rec: R.Record) -> None:
         raw = R.encode(rec)
         # L1 is reserved for the root + dimension working set

@@ -1,0 +1,640 @@
+"""Unified batched query-execution layer: PathStore → Pallas kernels.
+
+One engine abstraction serves every Q1–Q4 operation of the online tier,
+batched (DESIGN goal: the paper's "O(1) storage round trips per query"
+realized as "O(1) engine calls per *batch* of queries"):
+
+* ``QueryEngine``   — the batched operator contract.  Every method takes a
+  whole batch and counts as ONE round trip regardless of batch size; the
+  per-call batch sizes are tracked in ``EngineStats`` so benchmarks can
+  report amortization directly.
+
+* ``HostEngine``    — wraps a ``PathStore`` (or the digest-range
+  ``ShardedPathStore`` below).  Round trips execute on the host against
+  the LSM engine(s); batching amortizes the python/op dispatch overhead
+  and gives the planner a single choke point to count.
+
+* ``DeviceEngine``  — wraps a frozen ``TensorWiki``: Q1 point lookups and
+  Q4 prefix scans dispatch through ``kernels.ops`` to the Pallas kernels
+  (pure-jnp reference off-TPU), Q2 is one batched lookup whose child
+  listing derives from the resolved directory record, Q3 flattens the
+  whole batch's ancestor chains into one lookup launch, and keyword
+  containment runs as a Q1-style lookup into a device token-digest
+  table + CSR slice — the inverted index, tensorized.  Record payloads
+  live in a host-side row table (the stand-in for HBM payload rows).
+
+* ``BatchPlanner``  — collects the operations of many concurrent
+  navigation sessions into per-operator batches; ``flush()`` executes each
+  operator's pending batch in one engine call and resolves the futures.
+  This is continuous batching for storage ops, mirroring the serving
+  engine's token batching.
+
+Parity contract (tested in tests/test_engine.py): for any store state
+reachable through the §IV-C write protocol, ``HostEngine`` and
+``DeviceEngine`` frozen from the same store return identical results for
+every Q1–Q4 batch, including misses and unadvertised orphans.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Iterator, Optional, Sequence
+
+import numpy as np
+
+from . import paths as P
+from . import records as R
+from .store import KVEngine, MemKV, PathStore, _segment_tokens
+
+# operator names used for stats keys
+Q1, Q2, Q3, Q4, Q4C = "q1_get", "q2_ls", "q3_navigate", "q4_search", "q4_contains"
+
+
+# ---------------------------------------------------------------------------
+# stats
+# ---------------------------------------------------------------------------
+@dataclass
+class EngineStats:
+    """Per-operator accounting — the amortization evidence.
+
+    ``calls``/``ops``/``max_batch`` count *unique keys per engine call*
+    (what the engine actually executed).  ``served``/``max_served`` count
+    *logical operations resolved per call* as reported by the planner:
+    identical ops from concurrent sessions share one batch slot, so one
+    engine call can serve far more lookups than it executes keys."""
+
+    calls: dict[str, int] = field(default_factory=dict)
+    ops: dict[str, int] = field(default_factory=dict)
+    max_batch: dict[str, int] = field(default_factory=dict)
+    served: dict[str, int] = field(default_factory=dict)
+    max_served: dict[str, int] = field(default_factory=dict)
+
+    def record(self, op: str, batch: int) -> None:
+        if batch <= 0:
+            return
+        self.calls[op] = self.calls.get(op, 0) + 1
+        self.ops[op] = self.ops.get(op, 0) + batch
+        self.max_batch[op] = max(self.max_batch.get(op, 0), batch)
+
+    def record_served(self, op: str, n: int) -> None:
+        if n <= 0:
+            return
+        self.served[op] = self.served.get(op, 0) + n
+        self.max_served[op] = max(self.max_served.get(op, 0), n)
+
+    def total_calls(self) -> int:
+        return sum(self.calls.values())
+
+    def total_ops(self) -> int:
+        return sum(self.ops.values())
+
+    def reset(self) -> None:
+        for d in (self.calls, self.ops, self.max_batch,
+                  self.served, self.max_served):
+            d.clear()
+
+
+# ---------------------------------------------------------------------------
+# the batched operator contract
+# ---------------------------------------------------------------------------
+class QueryEngine:
+    """Batched Q1–Q4 execution.  One method call == one storage round trip."""
+
+    def __init__(self):
+        self.stats = EngineStats()
+
+    def q1_get(self, paths: Sequence[str]) -> list[Optional[R.Record]]:
+        raise NotImplementedError
+
+    def q2_ls(self, paths: Sequence[str]
+              ) -> list[Optional[tuple[R.DirRecord, list[str]]]]:
+        raise NotImplementedError
+
+    def q3_navigate(self, paths: Sequence[str]) -> list[list[R.Record]]:
+        raise NotImplementedError
+
+    def q4_search(self, prefixes: Sequence[str],
+                  limit: int | None = None) -> list[list[str]]:
+        raise NotImplementedError
+
+    def q4_contains(self, tokens: Sequence[str],
+                    limit: int | None = None) -> list[list[str]]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# digest-range sharded host store
+# ---------------------------------------------------------------------------
+class ShardedPathStore:
+    """``PathStore`` facade sharded by digest range across S shards.
+
+    Shard s owns the digest interval [s·2⁶⁴/S, (s+1)·2⁶⁴/S): point ops
+    route by ``H(π)``; namespace scans (Q4 prefix / token index) fan out to
+    every shard and merge in path order.  Each shard runs its own
+    ``MemKV`` — private memtable, private runs, private compaction — so
+    write pressure on one digest range never stalls reads on another
+    (the per-shard memtable/compaction isolation of a real LSM fleet).
+
+    Duck-types the ``PathStore`` surface used by the writer, cache,
+    tensorstore freeze and engines.
+    """
+
+    def __init__(self, n_shards: int = 4,
+                 engines: Sequence[KVEngine] | None = None,
+                 depth_budget: int | None = P.DEFAULT_DEPTH_BUDGET,
+                 memtable_limit: int = 4096):
+        if engines is not None:
+            self.shards = [PathStore(e, depth_budget=depth_budget)
+                           for e in engines]
+        else:
+            self.shards = [PathStore(MemKV(memtable_limit=memtable_limit),
+                                     depth_budget=depth_budget)
+                           for _ in range(max(1, n_shards))]
+        self.depth_budget = depth_budget
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def shard_of(self, path: str) -> int:
+        """Digest-range routing: floor(H(π) / 2⁶⁴ · S)."""
+        return (P.path_hash(path) * len(self.shards)) >> 64
+
+    def _route(self, path: str) -> tuple[PathStore, str]:
+        p = P.normalize(path, depth_budget=self.depth_budget)
+        return self.shards[self.shard_of(p)], p
+
+    # -- writes -------------------------------------------------------------
+    def put_record(self, path: str, rec: R.Record) -> None:
+        shard, p = self._route(path)
+        shard.put_record(p, rec)
+
+    def delete_record(self, path: str) -> None:
+        shard, p = self._route(path)
+        shard.delete_record(p)
+
+    # -- Q1–Q4 (unbatched PathStore surface) --------------------------------
+    def get(self, path: str) -> Optional[R.Record]:
+        shard, p = self._route(path)
+        return shard.get(p)
+
+    def ls(self, path: str) -> Optional[tuple[R.DirRecord, list[str]]]:
+        shard, p = self._route(path)
+        return shard.ls(p)
+
+    def navigate(self, path: str) -> list[R.Record]:
+        p = P.normalize(path, depth_budget=self.depth_budget)
+        out: list[R.Record] = []
+        for anc in list(P.ancestors(p)) + [p]:
+            rec = self.get(anc)
+            if rec is None:
+                break
+            out.append(rec)
+        return out
+
+    def search(self, prefix: str, limit: int | None = None) -> list[str]:
+        # per-shard results are already in path order, so the global first
+        # `limit` paths are contained in the union of per-shard first
+        # `limit` — fan out WITH the limit, then merge + truncate
+        merged: list[str] = []
+        for shard in self.shards:
+            merged.extend(shard.search(prefix, limit=limit))
+        merged.sort()
+        return merged if limit is None else merged[:limit]
+
+    def search_contains(self, token: str, limit: int | None = None) -> list[str]:
+        merged: list[str] = []
+        for shard in self.shards:
+            merged.extend(shard.search_contains(token, limit=limit))
+        merged.sort()
+        return merged if limit is None else merged[:limit]
+
+    # -- namespace / maintenance -------------------------------------------
+    def all_paths(self) -> list[str]:
+        out: list[str] = []
+        for shard in self.shards:
+            out.extend(shard.all_paths())
+        out.sort()
+        return out
+
+    def count(self) -> int:
+        return sum(s.count() for s in self.shards)
+
+    def flush(self) -> None:
+        for s in self.shards:
+            s.engine.flush()
+
+    def compact(self) -> None:
+        for s in self.shards:
+            eng = s.engine
+            if hasattr(eng, "compact"):
+                eng.compact()
+
+    def op_counts(self) -> dict[str, int]:
+        total: dict[str, int] = {}
+        for s in self.shards:
+            for k, v in s.engine.op_counts().items():
+                total[k] = total.get(k, 0) + v
+        return total
+
+
+# ---------------------------------------------------------------------------
+# host engine
+# ---------------------------------------------------------------------------
+class HostEngine(QueryEngine):
+    """Batched operators over a (possibly sharded) host PathStore."""
+
+    def __init__(self, store: "PathStore | ShardedPathStore"):
+        super().__init__()
+        self.store = store
+
+    def q1_get(self, paths):
+        self.stats.record(Q1, len(paths))
+        return [self.store.get(p) for p in paths]
+
+    def q2_ls(self, paths):
+        self.stats.record(Q2, len(paths))
+        return [self.store.ls(p) for p in paths]
+
+    def q3_navigate(self, paths):
+        self.stats.record(Q3, len(paths))
+        return [self.store.navigate(p) for p in paths]
+
+    def q4_search(self, prefixes, limit=None):
+        self.stats.record(Q4, len(prefixes))
+        return [self.store.search(p, limit=limit) for p in prefixes]
+
+    def q4_contains(self, tokens, limit=None):
+        self.stats.record(Q4C, len(tokens))
+        return [self.store.search_contains(t, limit=limit) for t in tokens]
+
+
+# ---------------------------------------------------------------------------
+# device engine
+# ---------------------------------------------------------------------------
+def _token_hash(token: str) -> int:
+    """FNV-1a of the token bytes — the same digest function as the path
+    keys (``paths.path_hash`` hashes raw UTF-8 without normalizing, and
+    tokens never contain '/', so the namespaces cannot collide)."""
+    return P.path_hash(token)
+
+
+class DeviceEngine(QueryEngine):
+    """Batched operators over the frozen tensor index.
+
+    Q1/Q3/keyword routing run through ``kernels.ops.path_lookup`` (Pallas
+    on TPU, binary-search reference elsewhere); Q4 prefix scans run
+    through ``kernels.ops.prefix_search``.  Record payloads are resolved
+    from a host-side row table — the row id IS the payload pointer, so the
+    device op does all the addressing work.
+    """
+
+    def __init__(self, wiki, records: list[Optional[R.Record]],
+                 depth_budget: int | None = P.DEFAULT_DEPTH_BUDGET):
+        super().__init__()
+        import jax.numpy as jnp
+        from ..kernels.ops import pad_keys
+        self.wiki = wiki
+        self.records = records
+        self.depth_budget = depth_budget
+        # pad the digest table once so the Pallas kernel path is eligible
+        khi, klo = pad_keys(np.asarray(wiki.keys_hi), np.asarray(wiki.keys_lo))
+        self._khi = jnp.asarray(khi)
+        self._klo = jnp.asarray(klo)
+        self._lex_order = np.asarray(wiki.lex_order)
+        self._max_path_bytes = int(wiki.lex_tokens.shape[1])
+        # device token-digest table: sorted FNV digests of every segment
+        # token + CSR of matching path rows (rows pre-sorted by path bytes,
+        # the same order the host token-index scan yields)
+        tok_paths: dict[str, list[int]] = {}
+        for row, path in enumerate(wiki.paths):
+            for tok in _segment_tokens(path):
+                tok_paths.setdefault(tok, []).append(row)
+        toks = sorted(tok_paths, key=_token_hash)
+        tdig = np.array([_token_hash(t) for t in toks], dtype=np.uint64)
+        t_off = np.zeros((len(toks) + 1,), dtype=np.int32)
+        t_rows: list[int] = []
+        for i, t in enumerate(toks):
+            rows = sorted(tok_paths[t], key=lambda r: wiki.paths[r])
+            t_rows.extend(rows)
+            t_off[i + 1] = len(t_rows)
+        thi, tlo = pad_keys(
+            (tdig >> np.uint64(32)).astype(np.uint32),
+            (tdig & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+        self._tok_hi = jnp.asarray(thi)
+        self._tok_lo = jnp.asarray(tlo)
+        self._tok_offsets = t_off
+        self._tok_rows = np.asarray(t_rows, dtype=np.int32)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_store(cls, store: "PathStore | ShardedPathStore") -> "DeviceEngine":
+        """Freeze the store into the device layout + host payload table
+        (the offline pipeline's snapshot step) — one store pass."""
+        from . import tensorstore as TS
+        wiki, recs = TS.freeze_with_records(store)
+        return cls(wiki, recs, depth_budget=store.depth_budget)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _pad_pow2(n: int, floor: int = 8) -> int:
+        """Bucket batch sizes to powers of two so the jitted lookup sees
+        O(log Q) distinct shapes instead of one compile per batch size."""
+        p = floor
+        while p < n:
+            p <<= 1
+        return p
+
+    def _lookup_rows(self, digest_pairs: np.ndarray,
+                     table=None) -> np.ndarray:
+        """One batched device lookup: (Q, 2) uint64 pairs → (Q,) row ids."""
+        import jax.numpy as jnp
+        from ..kernels.ops import path_lookup
+        q = digest_pairs.shape[0]
+        if q == 0:
+            return np.zeros((0,), dtype=np.int32)
+        khi, klo = table if table is not None else (self._khi, self._klo)
+        qp = self._pad_pow2(q)
+        if qp != q:
+            # (0, 0) can never collide with an FNV digest of a non-empty
+            # path; the padded tail is sliced off regardless
+            pad = np.zeros((qp - q, 2), dtype=np.uint64)
+            digest_pairs = np.concatenate([digest_pairs, pad])
+        rows = path_lookup(
+            khi, klo,
+            jnp.asarray(digest_pairs[:, 0].astype(np.uint32)),
+            jnp.asarray(digest_pairs[:, 1].astype(np.uint32)))
+        rows = np.asarray(rows)[:q]
+        # clip defensively against the padded key-table tail
+        n_rows = (len(self.records) if table is None
+                  else len(self._tok_offsets) - 1)
+        return np.where(rows >= n_rows, -1, rows)
+
+    def _digests(self, paths: list[str]) -> np.ndarray:
+        out = np.zeros((len(paths), 2), dtype=np.uint64)
+        for i, p in enumerate(paths):
+            h = P.path_hash(p)
+            out[i] = ((h >> 32) & 0xFFFFFFFF, h & 0xFFFFFFFF)
+        return out
+
+    def _norm(self, paths: Sequence[str]) -> list[str]:
+        return [P.normalize(p, depth_budget=self.depth_budget) for p in paths]
+
+    # ------------------------------------------------------------------
+    def q1_get(self, paths):
+        self.stats.record(Q1, len(paths))
+        norm = self._norm(paths)
+        rows = self._lookup_rows(self._digests(norm))
+        return [self.records[r] if r >= 0 else None for r in rows]
+
+    def q2_ls(self, paths):
+        """One batched lookup; children come co-located in the resolved
+        directory record ("children co-located with the parent"), so no
+        second device op is needed.  (TensorWiki's CSR serves row-level
+        traversal in core/tensorstore.py; the engine's record table
+        already carries the same lists.)"""
+        self.stats.record(Q2, len(paths))
+        norm = self._norm(paths)
+        rows = self._lookup_rows(self._digests(norm))
+        out = []
+        for p, r in zip(norm, rows):
+            rec = self.records[r] if r >= 0 else None
+            if rec is None or not isinstance(rec, R.DirRecord):
+                out.append(None)
+                continue
+            out.append((rec, [P.child(p, s) for s in rec.children()]))
+        return out
+
+    def q3_navigate(self, paths):
+        """The whole batch's ancestor chains flatten into ONE lookup
+        launch — step compression applied to the storage layer itself."""
+        self.stats.record(Q3, len(paths))
+        norm = self._norm(paths)
+        chains = [list(P.ancestors(p)) + [p] for p in norm]
+        flat = [a for chain in chains for a in chain]
+        rows = self._lookup_rows(self._digests(flat))
+        # the flat lookup resolves every level even past a miss (the batch
+        # is issued before results are known); the per-path result still
+        # truncates at the first miss, matching PathStore.navigate
+        return self._q3_truncate(chains, rows)
+
+    def _q3_truncate(self, chains, rows) -> list[list[R.Record]]:
+        out: list[list[R.Record]] = []
+        i = 0
+        for chain in chains:
+            recs: list[R.Record] = []
+            stopped = False
+            for _ in chain:
+                r = rows[i]
+                i += 1
+                if stopped:
+                    continue
+                rec = self.records[r] if r >= 0 else None
+                if rec is None:
+                    stopped = True
+                else:
+                    recs.append(rec)
+            out.append(recs)
+        return out
+
+    def q4_search(self, prefixes, limit=None):
+        """One prefix_search launch for the whole prefix batch: every
+        pending prefix is compared against each resident path tile."""
+        import jax.numpy as jnp
+        from . import tensorstore as TS
+        from ..kernels.ops import prefix_search
+        self.stats.record(Q4, len(prefixes))
+        if not prefixes:
+            return []
+        fixed = [p if p.startswith(P.SEP) else P.SEP + p for p in prefixes]
+        L = self._max_path_bytes
+        qp = self._pad_pow2(len(fixed), floor=4)
+        # pad with unmatchable prefixes (0xFF never occurs in a path) so
+        # the jitted scan sees bucketed shapes
+        pref_mat = np.full((qp, L), 255, dtype=np.uint8)
+        lens = np.full((qp,), 1, dtype=np.int32)
+        long_idx: set[int] = set()
+        for i, p in enumerate(fixed):
+            blen = len(p.encode("utf-8"))
+            if blen >= L:
+                # the packed token matrix truncates at L bytes, so the
+                # kernel cannot decide these exactly — resolve them from
+                # the untruncated host-side path list instead (rare: the
+                # depth budget keeps normal prefixes far below L)
+                long_idx.add(i)
+            else:
+                pref_mat[i] = TS.pack_path(p, L)
+                lens[i] = blen
+        bitmap = np.asarray(prefix_search(
+            self.wiki.lex_tokens, jnp.asarray(pref_mat), jnp.asarray(lens)))
+        out: list[list[str]] = []
+        for qi in range(len(fixed)):
+            if qi in long_idx:
+                seg_pref = fixed[qi].rstrip(P.SEP) or P.ROOT
+                matches = sorted(
+                    p for p in self.wiki.paths
+                    if p.startswith(fixed[qi])
+                    and (P.is_prefix(seg_pref, p) or p == fixed[qi]))
+                out.append(matches if limit is None else matches[:limit])
+                continue
+            hits = np.nonzero(bitmap[:, qi])[0]
+            matches = [self.wiki.paths[self._lex_order[i]] for i in hits]
+            out.append(matches if limit is None else matches[:limit])
+        return out
+
+    def q4_contains(self, tokens, limit=None):
+        """Keyword routing: the segment-token inverted index as a device
+        lookup — token digests through the SAME Pallas path_lookup kernel,
+        then a CSR slice of matching path rows.  Exact segment-token
+        semantics, identical to PathStore.search_contains."""
+        self.stats.record(Q4C, len(tokens))
+        if not tokens:
+            return []
+        dig = np.zeros((len(tokens), 2), dtype=np.uint64)
+        for i, t in enumerate(tokens):
+            h = _token_hash(t.lower())
+            dig[i] = ((h >> 32) & 0xFFFFFFFF, h & 0xFFFFFFFF)
+        rows = self._lookup_rows(dig, table=(self._tok_hi, self._tok_lo))
+        out: list[list[str]] = []
+        for r in rows:
+            if r < 0:
+                out.append([])
+                continue
+            lo, hi = self._tok_offsets[r], self._tok_offsets[r + 1]
+            prows = self._tok_rows[lo:hi]
+            matches = [self.wiki.paths[i] for i in prows]
+            out.append(matches if limit is None else matches[:limit])
+        return out
+
+
+# ---------------------------------------------------------------------------
+# batch planner
+# ---------------------------------------------------------------------------
+class OpFuture:
+    """Handle for one pending engine operation.  ``value`` is valid after
+    the planner flush that executed its batch."""
+
+    __slots__ = ("op", "arg", "value", "done")
+
+    def __init__(self, op: str, arg):
+        self.op = op
+        self.arg = arg
+        self.value = None
+        self.done = False
+
+    def result(self):
+        if not self.done:
+            raise RuntimeError(
+                f"operation {self.op}({self.arg!r}) not flushed yet")
+        return self.value
+
+
+class BatchPlanner:
+    """Collects Q1–Q4 operations from many concurrent sessions and
+    executes each operator's pending set in ONE engine call per flush.
+
+    Identical operations from different sessions are deduplicated into a
+    single batch slot (they share the result), so a flush costs at most
+    five engine round trips — one per live operator — regardless of how
+    many sessions are in flight.
+    """
+
+    def __init__(self, engine: QueryEngine):
+        self.engine = engine
+        self._pending: dict[str, dict[object, list[OpFuture]]] = {}
+        self._lock = threading.Lock()
+        self.flushes = 0
+
+    # -- operation futures --------------------------------------------------
+    def _enqueue(self, op: str, key, arg) -> OpFuture:
+        fut = OpFuture(op, arg)
+        with self._lock:
+            self._pending.setdefault(op, {}).setdefault(key, []).append(fut)
+        return fut
+
+    def get(self, path: str) -> OpFuture:
+        return self._enqueue(Q1, path, path)
+
+    def ls(self, path: str) -> OpFuture:
+        return self._enqueue(Q2, path, path)
+
+    def navigate(self, path: str) -> OpFuture:
+        return self._enqueue(Q3, path, path)
+
+    def search(self, prefix: str, limit: int | None = None) -> OpFuture:
+        return self._enqueue(Q4, (prefix, limit), prefix)
+
+    def contains(self, token: str, limit: int | None = None) -> OpFuture:
+        return self._enqueue(Q4C, (token, limit), token)
+
+    def pending_ops(self) -> int:
+        return sum(len(futs) for by_key in self._pending.values()
+                   for futs in by_key.values())
+
+    # -- execution ----------------------------------------------------------
+    def flush(self) -> int:
+        """Execute every pending batch; one engine call per operator kind.
+        Returns the number of futures resolved."""
+        with self._lock:
+            pending, self._pending = self._pending, {}
+        if not pending:
+            return 0
+        self.flushes += 1
+        resolved = 0
+        for op, by_key in pending.items():
+            keys = list(by_key)
+            if op == Q1:
+                results = self.engine.q1_get(keys)
+            elif op == Q2:
+                results = self.engine.q2_ls(keys)
+            elif op == Q3:
+                results = self.engine.q3_navigate(keys)
+            elif op == Q4:
+                # group by limit so one call covers each limit class
+                results = self._ranged(self.engine.q4_search, keys)
+            else:
+                results = self._ranged(self.engine.q4_contains, keys)
+            n_served = 0
+            for key, value in zip(keys, results):
+                for fut in by_key[key]:
+                    fut.value = value
+                    fut.done = True
+                    n_served += 1
+            self.engine.stats.record_served(op, n_served)
+            resolved += n_served
+        return resolved
+
+    @staticmethod
+    def _grouped_by_limit(keys):
+        groups: dict[int | None, list] = {}
+        for k in keys:
+            groups.setdefault(k[1], []).append(k)
+        return groups
+
+    def _ranged(self, method, keys):
+        """Execute (arg, limit) keyed scans: one engine call per distinct
+        limit (usually exactly one)."""
+        by_limit = self._grouped_by_limit(keys)
+        res: dict[object, list[str]] = {}
+        for limit, ks in by_limit.items():
+            outs = method([k[0] for k in ks], limit=limit)
+            for k, o in zip(ks, outs):
+                res[k] = o
+        return [res[k] for k in keys]
+
+
+def drive(gen, planner: BatchPlanner):
+    """Run one session generator to completion, flushing the planner at
+    every yield point (the single-session degenerate case of the
+    multi-session scheduler in navigate.run_sessions)."""
+    try:
+        while True:
+            next(gen)
+            planner.flush()
+    except StopIteration as e:
+        return e.value
+
+
+__all__ = ["QueryEngine", "HostEngine", "DeviceEngine", "ShardedPathStore",
+           "BatchPlanner", "OpFuture", "EngineStats", "drive",
+           "Q1", "Q2", "Q3", "Q4", "Q4C"]

@@ -88,6 +88,14 @@ def freeze(store: PathStore, max_path_bytes: int = MAX_PATH_BYTES) -> TensorWiki
     Runs in the offline pipeline; the online tier swaps the frozen table
     atomically (the tensor-level analogue of the invalidation protocol —
     bounded staleness Δ = refresh cadence)."""
+    return freeze_with_records(store, max_path_bytes)[0]
+
+
+def freeze_with_records(store: PathStore,
+                        max_path_bytes: int = MAX_PATH_BYTES
+                        ) -> tuple[TensorWiki, list]:
+    """``freeze`` plus the decoded records in row order — one store pass
+    total, so engine.DeviceEngine snapshots don't pay 3×N point gets."""
     all_paths = sorted(store.all_paths())
     n = len(all_paths)
     if n == 0:
@@ -115,12 +123,13 @@ def freeze(store: PathStore, max_path_bytes: int = MAX_PATH_BYTES) -> TensorWiki
     access = access[order]
     depths = depths[order]
     sorted_paths = [all_paths[i] for i in order]
+    sorted_recs = [recs[i] for i in order]
     row_of = {p: i for i, p in enumerate(sorted_paths)}
-    # children CSR
+    # children CSR (reuses the records fetched above — no second pass)
     offsets = np.zeros((n + 1,), dtype=np.int32)
     rows: list[int] = []
     for i, p in enumerate(sorted_paths):
-        rec = store.get(p)
+        rec = sorted_recs[i]
         kids: list[int] = []
         if isinstance(rec, R.DirRecord):
             for seg in rec.children():
@@ -138,7 +147,7 @@ def freeze(store: PathStore, max_path_bytes: int = MAX_PATH_BYTES) -> TensorWiki
     # pinned prefix: "/" + dimensions first in lex order (they sort early
     # because "/" < "/d/..." at equal prefixes — compute exactly)
     pinned = sum(1 for p in sorted(lex_paths) if P.depth(p) <= 1)
-    return TensorWiki(
+    wiki = TensorWiki(
         keys_hi=jnp.asarray(digests[:, 0].astype(np.uint32)),
         keys_lo=jnp.asarray(digests[:, 1].astype(np.uint32)),
         path_tokens=jnp.asarray(toks_h),
@@ -152,6 +161,7 @@ def freeze(store: PathStore, max_path_bytes: int = MAX_PATH_BYTES) -> TensorWiki
         n_pinned=int(pinned),
         paths=sorted_paths,
     )
+    return wiki, sorted_recs
 
 
 # ---------------------------------------------------------------------------

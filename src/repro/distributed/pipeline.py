@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..jax_compat import shard_map
+
 
 @dataclass(frozen=True)
 class PipelineSchedule:
@@ -93,7 +95,7 @@ def pipeline_apply(stage_fn, stage_params, x_micro, sched: PipelineSchedule,
     pspec = P(axis)
     other = tuple(a for a in mesh.axis_names if a != axis)
     del other
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),

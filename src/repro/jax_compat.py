@@ -1,0 +1,64 @@
+"""Version gates for jax APIs that moved between the pinned 0.4.37 and
+current releases.  Every version-sensitive jax surface the repo touches is
+adapted HERE so call sites stay clean and the next pin bump is one audit
+of this file.
+
+Gated surfaces (new spelling → 0.4.37 fallback):
+  * ``jax.sharding.AxisType`` + ``make_mesh(axis_types=…)`` → plain
+    ``jax.make_mesh`` (Auto is the implicit default mode).
+  * ``jax.shard_map(check_vma=…)`` → ``jax.experimental.shard_map``
+    (kwarg named ``check_rep``).
+  * ``Compiled.cost_analysis()`` returns a dict → returns a one-element
+    list of dicts.
+  * ``jax.tree.flatten_with_path`` → ``jax.tree_util`` spelling (use
+    ``jax.tree_util.tree_flatten_with_path`` directly; it exists in every
+    supported version).
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.4.38
+    from jax.sharding import AxisType
+except ImportError:  # 0.4.37
+    AxisType = None
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` with explicit Auto axis types when supported."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(AxisType.Auto,) * len(axes),
+                                 **kwargs)
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
+try:  # jax >= 0.4.38: top-level export, kwarg is check_vma
+    _shard_map_new = jax.shard_map
+except AttributeError:
+    _shard_map_new = None
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    if _shard_map_new is not None:
+        return _shard_map_new(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=check_vma)
+    return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every version
+    (0.4.37 wraps the per-program dict in a list)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca) if ca else {}
+
+
+__all__ = ["AxisType", "make_mesh", "shard_map", "cost_analysis_dict"]

@@ -91,23 +91,35 @@ def rmsnorm(x, scale=None, eps: float = 1e-6, block_t: int = 256):
 
 def path_lookup(keys_hi, keys_lo, q_hi, q_lo, *, block_q: int = 256):
     """Sorted-table batched GET.  Keys must be pre-padded via pad_keys for
-    the kernel path; the reference accepts any length."""
+    the kernel path; the reference accepts any length.  The fallback is
+    jitted here — the batched QueryEngine calls this once per engine
+    round trip, so an eagerly-traced fori_loop would dominate the call."""
     if _use_pallas() and keys_hi.shape[0] % 128 == 0:
         return _lookup_pallas(keys_hi, keys_lo, q_hi, q_lo,
                               block_q=block_q, interpret=not _on_tpu())
-    return ref.path_lookup_ref(keys_hi, keys_lo, q_hi, q_lo)
+    return _path_lookup_ref_jit(keys_hi, keys_lo, q_hi, q_lo)
+
+
+_path_lookup_ref_jit = jax.jit(ref.path_lookup_ref)
 
 
 def prefix_search(tokens, prefixes, prefix_lens, *, block_n: int = 1024):
-    """(N, L) × (Q, L) → (N, Q) bitmap."""
+    """(N, L) × (Q, L) → (N, Q) bitmap.
+
+    The batched QueryEngine path sends whole prefix batches here, so the
+    fallback vmaps the single-prefix reference over the query axis — one
+    XLA call per batch, matching the kernel's launch granularity."""
     if _use_pallas():
         return _prefix_pallas(tokens, prefixes, prefix_lens,
                               block_n=block_n, interpret=not _on_tpu())
-    # reference handles one prefix at a time
-    import jax.numpy as jnp
-    cols = [ref.prefix_search_ref(tokens, prefixes[i], prefix_lens[i])
-            for i in range(prefixes.shape[0])]
-    return jnp.stack(cols, axis=1)
+    return _prefix_ref_batched(tokens, prefixes, prefix_lens)
+
+
+@jax.jit
+def _prefix_ref_batched(tokens, prefixes, prefix_lens):
+    cols = jax.vmap(lambda p, n: ref.prefix_search_ref(tokens, p, n))(
+        prefixes, prefix_lens)                       # (Q, N)
+    return cols.T                                    # (N, Q)
 
 
 __all__ = ["attention", "decode_attention", "moe_router", "rmsnorm",

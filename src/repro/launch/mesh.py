@@ -16,14 +16,14 @@ EXPERIMENTS.md §Perf for the measured alternative of pipelining over it).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from ..jax_compat import make_mesh as make_mesh_compat  # noqa: F401  (re-export)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -31,8 +31,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // max(data, 1)))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh_compat((data, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

@@ -5,9 +5,16 @@ The online tier of the paper, composed end-to-end:
   via the zoo LM's decode loop (continuous batching: new requests join
   the batch at any step, finished ones retire and free their slot).
 
-The engine demonstrates the serving-side integration of the storage layer
-— the LM reads *paths + payloads surfaced by NAV*, and every per-query
-trace (tool calls, pages read) feeds the Table V metrics.
+Storage operations batch exactly like tokens do: every admitted request
+runs its navigation as a *session generator* against the shared
+``BatchPlanner`` (core/engine.py), and ``step()`` drains ONE planner
+batch per decode step — all in-flight sessions' pending Q1–Q4 operations
+execute as one engine call per operator, then every lane with decided
+tokens advances.  The storage substrate is pluggable: a host
+``PathStore``/``ShardedPathStore`` or the device ``QueryEngine`` whose
+Q1/Q4 run in the Pallas kernels.
+
+Every per-query trace (tool calls, pages read) feeds the Table V metrics.
 """
 from __future__ import annotations
 
@@ -20,9 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.cache import TieredCache
-from ..core.navigate import Navigator, UnitBudget, WallClockBudget
+from ..core.engine import BatchPlanner, HostEngine, QueryEngine
+from ..core.navigate import Navigator, UnitBudget
 from ..core.oracle import Oracle
-from ..core.store import PathStore
 from ..data.tokenizer import HashTokenizer, EOS
 from ..models import model as M
 from ..models import transformer as T
@@ -45,16 +52,24 @@ class Request:
 
 class ServingEngine:
     """Slots-based continuous batching: ``batch_size`` decode lanes; each
-    lane holds one active request's token state."""
+    lane holds one active request.  A lane's lifecycle is
+    navigating → decoding → retired: while navigating, the lane's session
+    contributes storage ops to the per-step planner batch; once its
+    navigation completes it prefills and joins token decoding."""
 
     def __init__(self, cfg: ModelConfig, params, tokenizer: HashTokenizer,
-                 store: PathStore, oracle: Oracle,
+                 store, oracle: Oracle,
                  cache: TieredCache | None = None,
                  batch_size: int = 4, max_len: int = 512, mesh=None):
         self.cfg = cfg
         self.params = params
         self.tok = tokenizer
-        self.nav = Navigator(store, oracle, cache=cache)
+        if isinstance(store, QueryEngine):
+            self.engine = store
+        else:
+            self.engine = HostEngine(store)
+        self.planner = BatchPlanner(self.engine)
+        self.nav = Navigator(self.planner, oracle, cache=cache)
         self.oracle = oracle
         self.batch_size = batch_size
         self.max_len = max_len
@@ -65,22 +80,39 @@ class ServingEngine:
         self.slots: list[Optional[Request]] = [None] * batch_size
         self._remaining = [0] * batch_size
         self._gen: list[list[int]] = [[] for _ in range(batch_size)]
+        # storage phase state per lane: (session generator, t0) or None
+        self._nav: list = [None] * batch_size
+        self._decoding = [False] * batch_size
 
     # ------------------------------------------------------------------
-    def _retrieve(self, req: Request) -> str:
-        t0 = time.perf_counter()
-        results, trace = self.nav.nav(req.query, UnitBudget(req.budget_units))
+    def submit(self, req: Request) -> bool:
+        """Admit a request into a free lane.  Navigation starts on the
+        next ``step()``; the lane joins decoding when its session ends."""
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = req
+                self._nav[i] = (self.nav.session(req.query,
+                                                 UnitBudget(req.budget_units)),
+                                time.perf_counter())
+                self._decoding[i] = False
+                return True
+        return False
+
+    # ------------------------------------------------------------------
+    def _finish_nav(self, slot: int, value, t0: float) -> None:
+        """Session ended: score evidence, prefill the lane, arm decode."""
+        req = self.slots[slot]
+        results, trace = value
         req.nav_results = results
         req.trace = trace
         req.latency_s = time.perf_counter() - t0
         evidence = [r.text for r in results if r.text]
-        return self.oracle.answer(req.query, evidence)
+        req.answer = self.oracle.answer(req.query, evidence)
+        self._prefill(slot, req)
 
-    def _admit(self, req: Request, slot: int) -> None:
+    def _prefill(self, slot: int, req: Request) -> None:
         """Prefill the lane with the evidence-conditioned prompt."""
-        answer_seed = self._retrieve(req)
-        req.answer = answer_seed
-        prompt = f"question: {req.query} evidence: {answer_seed}"
+        prompt = f"question: {req.query} evidence: {req.answer}"
         ids = self.tok.encode(prompt)[: self.max_len - req.max_new_tokens - 1]
         # sequential prefill through the decode path (single-lane writes)
         self.lengths = self.lengths.at[slot].set(0)
@@ -91,31 +123,47 @@ class ServingEngine:
                 {"tokens": toks, "lengths": self.lengths})
             self.lengths = self.lengths.at[slot].add(1)
         self.tokens = self.tokens.at[slot].set(int(ids[-1]) if ids else 1)
-        self.slots[slot] = req
         self._remaining[slot] = req.max_new_tokens
         self._gen[slot] = []
+        self._decoding[slot] = True
 
-    def submit(self, req: Request) -> bool:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                self._admit(req, i)
-                return True
-        return False
+    # ------------------------------------------------------------------
+    def _step_storage(self) -> None:
+        """Advance every navigating lane to its next storage dependency,
+        then drain ONE planner batch for all of them together."""
+        finished: list[tuple[int, object, float]] = []
+        for i, nav_state in enumerate(self._nav):
+            if nav_state is None:
+                continue
+            gen, t0 = nav_state
+            try:
+                next(gen)
+            except StopIteration as e:
+                finished.append((i, e.value, t0))
+                self._nav[i] = None
+        self.planner.flush()
+        for slot, value, t0 in finished:
+            self._finish_nav(slot, value, t0)
 
     def step(self) -> list[Request]:
-        """One decode step for every active lane; returns retired requests."""
+        """One serving step: one storage batch + one decode step for every
+        decoding lane; returns retired requests."""
         if not any(s is not None for s in self.slots):
+            return []
+        self._step_storage()
+        if not any(self._decoding):
             return []
         nxt, logits, self.state = self._serve(
             self.params, self.state,
             {"tokens": self.tokens, "lengths": self.lengths})
         self.tokens = nxt
         self.lengths = self.lengths + jnp.asarray(
-            [1 if s is not None else 0 for s in self.slots], jnp.int32)
+            [1 if self._decoding[i] else 0 for i in range(self.batch_size)],
+            jnp.int32)
         done: list[Request] = []
         nxt_host = np.asarray(nxt)
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or not self._decoding[i]:
                 continue
             self._gen[i].append(int(nxt_host[i]))
             self._remaining[i] -= 1
@@ -128,6 +176,7 @@ class ServingEngine:
                 req.done = True
                 done.append(req)
                 self.slots[i] = None
+                self._decoding[i] = False
         return done
 
     def run(self, requests: list[Request]) -> list[Request]:

@@ -1,0 +1,254 @@
+"""Minimal, deterministic fallback for the ``hypothesis`` API surface this
+test suite uses.  Loaded by ``tests/conftest.py`` ONLY when the real
+package is not installed (the pinned container image ships without it);
+any genuine hypothesis install shadows this shim.
+
+Scope: ``given``/``settings`` decorators plus the strategy combinators the
+tests call (integers, lists, tuples, sets, text, characters, binary,
+sampled_from, builds) with ``.map``/``.filter``.  Generation is seeded per
+test name so failures reproduce exactly; there is no shrinking — a failing
+example is reported verbatim via the assertion that raised.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable
+
+__version__ = "0.0-repro-shim"
+
+_DEFAULT_MAX_EXAMPLES = 30
+
+
+class SearchStrategy:
+    """Base strategy: ``draw(rnd)`` produces one example."""
+
+    def draw(self, rnd: random.Random) -> Any:
+        raise NotImplementedError
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+
+    def draw(self, rnd):
+        return self.fn(self.base.draw(rnd))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def draw(self, rnd):
+        for _ in range(1000):
+            x = self.base.draw(rnd)
+            if self.pred(x):
+                return x
+        raise RuntimeError("filter predicate rejected 1000 straight draws")
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2 ** 16) if min_value is None else min_value
+        self.hi = 2 ** 16 if max_value is None else max_value
+
+    def draw(self, rnd):
+        # bias toward the boundaries — cheap edge-case coverage
+        r = rnd.random()
+        if r < 0.1:
+            return self.lo
+        if r < 0.2:
+            return self.hi
+        return rnd.randint(self.lo, self.hi)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=None, unique=False,
+                 unique_by=None):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 8
+        self.unique = unique or unique_by is not None
+        self.key = unique_by or (lambda x: x)
+
+    def draw(self, rnd):
+        n = rnd.randint(self.min_size, self.max_size)
+        out, seen = [], set()
+        attempts = 0
+        while len(out) < n and attempts < 50 * (n + 1):
+            attempts += 1
+            x = self.elements.draw(rnd)
+            if self.unique:
+                k = self.key(x)
+                if k in seen:
+                    continue
+                seen.add(k)
+            out.append(x)
+        return out
+
+
+class _Sets(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=None):
+        self._lists = _Lists(elements, min_size=min_size, max_size=max_size,
+                             unique=True)
+
+    def draw(self, rnd):
+        return set(self._lists.draw(rnd))
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *parts):
+        self.parts = parts
+
+    def draw(self, rnd):
+        return tuple(p.draw(rnd) for p in self.parts)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def draw(self, rnd):
+        return rnd.choice(self.options)
+
+
+#: default character pool: printable ASCII plus a few multi-byte UTF-8
+#: codepoints so path/segment properties see non-ASCII input
+_CHAR_POOL = ([chr(c) for c in range(32, 127)]
+              + list("éßøñλΩ中文писатель"))
+
+
+class _Characters(SearchStrategy):
+    def __init__(self, blacklist_characters="", blacklist_categories=(),
+                 whitelist_categories=None, **_ignored):
+        del whitelist_categories  # pool is pre-vetted; surrogates excluded
+        self.pool = [c for c in _CHAR_POOL if c not in set(blacklist_characters)]
+
+    def draw(self, rnd):
+        return rnd.choice(self.pool)
+
+
+class _Text(SearchStrategy):
+    def __init__(self, alphabet=None, min_size=0, max_size=None):
+        if alphabet is None:
+            self.alpha = _Characters()
+        elif isinstance(alphabet, SearchStrategy):
+            self.alpha = alphabet
+        else:
+            self.alpha = _SampledFrom(list(alphabet))
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def draw(self, rnd):
+        n = rnd.randint(self.min_size, self.max_size)
+        return "".join(self.alpha.draw(rnd) for _ in range(n))
+
+
+class _Binary(SearchStrategy):
+    def __init__(self, min_size=0, max_size=None):
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 8
+
+    def draw(self, rnd):
+        n = rnd.randint(self.min_size, self.max_size)
+        return bytes(rnd.randrange(256) for _ in range(n))
+
+
+class _Builds(SearchStrategy):
+    def __init__(self, target, *args, **kwargs):
+        self.target, self.args, self.kwargs = target, args, kwargs
+
+    def draw(self, rnd):
+        return self.target(*(a.draw(rnd) for a in self.args),
+                           **{k: v.draw(rnd) for k, v in self.kwargs.items()})
+
+
+class _Strategies:
+    integers = staticmethod(_Integers)
+    lists = staticmethod(_Lists)
+    sets = staticmethod(_Sets)
+    tuples = staticmethod(_Tuples)
+    sampled_from = staticmethod(_SampledFrom)
+    characters = staticmethod(_Characters)
+    text = staticmethod(_Text)
+    binary = staticmethod(_Binary)
+    builds = staticmethod(_Builds)
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: SearchStrategy, **kw_strats: SearchStrategy):
+    """Bind the trailing positional parameters of the test to strategy
+    draws (leading parameters stay visible to pytest as fixtures), run
+    ``max_examples`` seeded examples."""
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        n_pos = len(strats)
+        kw_names = set(kw_strats)
+        # strategies bind the TRAILING positional parameters; everything
+        # before them stays visible to pytest as fixtures
+        strat_names = [p.name for p in params[len(params) - n_pos:]]
+        fixture_params = [p for p in params[: len(params) - n_pos]
+                          if p.name not in kw_names]
+        fixture_names = [p.name for p in fixture_params]
+
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kwargs):
+            base_kw = dict(zip(fixture_names, fixture_args))
+            base_kw.update(fixture_kwargs)
+            max_examples = getattr(fn, "_shim_max_examples",
+                                   _DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(f"shim:{fn.__module__}.{fn.__qualname__}")
+            for i in range(max_examples):
+                call_kw = dict(base_kw)
+                call_kw.update(zip(strat_names,
+                                   (s.draw(rnd) for s in strats)))
+                call_kw.update((k, s.draw(rnd))
+                               for k, s in kw_strats.items())
+                try:
+                    fn(**call_kw)
+                except Exception as e:
+                    shown = {k: v for k, v in call_kw.items()
+                             if k not in fixture_names}
+                    raise AssertionError(
+                        f"falsifying example #{i}: {shown!r}") from e
+
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        return wrapper
+
+    return deco
+
+
+def assume(condition: bool) -> None:
+    """Shim: hard-skip unsupported; treat failed assumptions as no-ops for
+    the draws our suite makes (none currently call assume)."""
+    if not condition:
+        raise AssertionError("assume() failed under the hypothesis shim")
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+__all__ = ["given", "settings", "strategies", "assume", "HealthCheck",
+           "SearchStrategy"]

@@ -7,6 +7,13 @@ from pathlib import Path
 # allow `pytest tests/` without PYTHONPATH=src
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+# the pinned container ships without hypothesis; fall back to the vendored
+# deterministic shim (a real install always wins — it is found first)
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.append(str(Path(__file__).resolve().parent / "_vendor"))
+
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import pytest  # noqa: E402

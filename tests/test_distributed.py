@@ -18,10 +18,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 os.environ["JAX_PLATFORMS"] = "cpu"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh_compat
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto, AxisType.Auto))
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 
 # (a) EP MoE == local MoE
 from repro.configs import get_config
@@ -44,8 +44,7 @@ print("EP==local OK", err)
 
 # (b) pipeline schedule == sequential
 from repro.distributed.pipeline import PipelineSchedule, pipeline_apply
-pmesh = jax.make_mesh((4, 2), ("pod", "model"),
-                      axis_types=(AxisType.Auto, AxisType.Auto))
+pmesh = make_mesh_compat((4, 2), ("pod", "model"))
 S, Mb, F = 4, 6, 8
 ws = jax.random.normal(jax.random.PRNGKey(2), (S, F, F)) * 0.3
 xs = jax.random.normal(jax.random.PRNGKey(3), (Mb, 5, F))

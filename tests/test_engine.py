@@ -1,0 +1,195 @@
+"""QueryEngine layer: host/device parity, sharding transparency, planner
+batching (ISSUE 1 acceptance: every Q1–Q4 op through one engine; batched
+navigation ≡ unbatched navigation with strictly fewer round trips)."""
+import random
+
+import pytest
+
+from repro.core import paths as P
+from repro.core import records as R
+from repro.core.consistency import WikiWriter
+from repro.core.engine import (BatchPlanner, DeviceEngine, HostEngine,
+                               ShardedPathStore)
+from repro.core.navigate import Navigator, UnitBudget
+from repro.core.oracle import HeuristicOracle
+from repro.core.store import MemKV, PathStore
+
+
+# ---------------------------------------------------------------------------
+# randomized wiki construction through the §IV-C write protocol
+# ---------------------------------------------------------------------------
+def _random_wiki(store, seed: int) -> dict:
+    """Admit a random tree (protocol-respecting), leave some orphans via
+    partial admissions, unlink some nodes.  Returns query material."""
+    rng = random.Random(seed)
+    w = WikiWriter(store, clock=lambda: 0.0)  # deterministic meta timestamps
+    w.ensure_root("root")
+    dims = [f"d{i}" for i in range(rng.randint(2, 4))]
+    live, orphans = [], []
+    for d in dims:
+        w.admit(f"/{d}", R.DirRecord(name=d, summary=f"dim {d}"))
+        for e in range(rng.randint(1, 5)):
+            path = f"/{d}/ent_{e}_{rng.randint(0, 9)}"
+            as_dir = rng.random() < 0.3
+            rec = (R.DirRecord(name=P.basename(path), summary=f"sub of {d}")
+                   if as_dir else
+                   R.FileRecord(name=P.basename(path),
+                                text=f"text {d} {e} {rng.random():.3f}"))
+            if rng.random() < 0.15:
+                # orphan: child written, parent update never happens
+                steps = w.admit_steps(path, rec)
+                next(steps)
+                orphans.append(path)
+            else:
+                w.admit(path, rec)
+                live.append(path)
+                if as_dir:
+                    sub = path + f"/sub{rng.randint(0, 3)}"
+                    w.admit(sub, R.FileRecord(name=P.basename(sub),
+                                              text=f"sub {sub}"))
+                    live.append(sub)
+    # a few deletions (reverse-order unlink keeps the store consistent)
+    for path in rng.sample(live, min(2, len(live))):
+        w.unlink(path)
+        live.remove(path)
+    missing = [f"/{d}/nope_{i}" for i, d in enumerate(dims)] + ["/zz/yy"]
+    return {"rng": rng, "dims": dims, "live": live, "orphans": orphans,
+            "missing": missing}
+
+
+def _query_batches(mat):
+    rng = mat["rng"]
+    pool = mat["live"] + mat["orphans"] + mat["missing"] + ["/"]
+    q1 = [rng.choice(pool) for _ in range(24)]
+    q2 = ["/"] + [P.SEP + d for d in mat["dims"]] + q1[:8]
+    q3 = [rng.choice(pool) for _ in range(8)]
+    prefixes = ["/", P.SEP + mat["dims"][0], "/zz",
+                rng.choice(pool), mat["dims"][-1]]  # last: no leading slash
+    tokens = ["ent", "sub", "nothere", mat["dims"][0],
+              P.basename(rng.choice(mat["live"] or ["/x"]))]
+    return q1, q2, q3, prefixes, tokens
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_host_device_parity_randomized(seed):
+    """Property: HostEngine and DeviceEngine frozen from the same store
+    agree on every Q1–Q4 batch — hits, misses, orphans, deletions."""
+    store = ShardedPathStore(n_shards=3, memtable_limit=64)
+    mat = _random_wiki(store, seed)
+    host = HostEngine(store)
+    dev = DeviceEngine.from_store(store)
+    q1, q2, q3, prefixes, tokens = _query_batches(mat)
+
+    assert host.q1_get(q1) == dev.q1_get(q1)
+    assert host.q2_ls(q2) == dev.q2_ls(q2)
+    assert host.q3_navigate(q3) == dev.q3_navigate(q3)
+    assert host.q4_search(prefixes) == dev.q4_search(prefixes)
+    assert host.q4_search(prefixes, limit=3) == dev.q4_search(prefixes, limit=3)
+    assert host.q4_contains(tokens) == dev.q4_contains(tokens)
+    assert host.q4_contains(tokens, limit=2) == dev.q4_contains(tokens, limit=2)
+    # each batch was one engine call on both sides
+    assert host.stats.calls == dev.stats.calls
+    assert host.stats.max_batch["q1_get"] == len(q1)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_sharding_is_transparent(seed):
+    """Digest-range sharding changes data placement, never results."""
+    plain = PathStore(MemKV())
+    sharded = ShardedPathStore(n_shards=4, memtable_limit=32)
+    mat_p = _random_wiki(plain, seed)
+    _random_wiki(sharded, seed)
+    q1, q2, q3, prefixes, tokens = _query_batches(mat_p)
+    he_p, he_s = HostEngine(plain), HostEngine(sharded)
+    assert he_p.q1_get(q1) == he_s.q1_get(q1)
+    assert he_p.q2_ls(q2) == he_s.q2_ls(q2)
+    assert he_p.q3_navigate(q3) == he_s.q3_navigate(q3)
+    assert he_p.q4_search(prefixes) == he_s.q4_search(prefixes)
+    assert he_p.q4_contains(tokens) == he_s.q4_contains(tokens)
+    assert plain.all_paths() == sharded.all_paths()
+    # the namespace really is spread: no shard holds everything
+    per_shard = [s.count() for s in sharded.shards]
+    assert sum(per_shard) == sharded.count()
+    assert max(per_shard) < sharded.count()
+
+
+def test_q4_long_prefix_parity():
+    """Prefixes at/over the packed path width (96 B) can't be decided by
+    the kernel's truncated token matrix — the device engine must resolve
+    them exactly from the host-side path list."""
+    store = PathStore(MemKV())
+    w = WikiWriter(store, clock=lambda: 0.0)
+    w.ensure_root()
+    seg = "s" * 60
+    w.admit(f"/{seg}", R.DirRecord(name=seg))
+    w.admit(f"/{seg}/{seg}", R.DirRecord(name=seg))
+    w.admit(f"/{seg}/{seg}/leaf_a", R.FileRecord(name="leaf_a", text="a"))
+    w.admit(f"/{seg}/{seg}/leaf_b", R.FileRecord(name="leaf_b", text="b"))
+    host, dev = HostEngine(store), DeviceEngine.from_store(store)
+    probes = [f"/{seg}/{seg}",            # 122 B — over the packed width
+              f"/{seg}/{seg}/leaf_a",     # exact long path
+              f"/{seg}", "/"]
+    assert host.q4_search(probes) == dev.q4_search(probes)
+    assert host.q4_search(probes, limit=1) == dev.q4_search(probes, limit=1)
+
+
+def test_planner_dedups_and_batches():
+    store = ShardedPathStore(n_shards=2)
+    _random_wiki(store, 1)
+    eng = HostEngine(store)
+    pl = BatchPlanner(eng)
+    f1 = pl.get("/d0")
+    f2 = pl.get("/d0")            # deduplicated into one batch slot
+    f3 = pl.ls("/")
+    f4 = pl.search("/d0", limit=4)
+    f5 = pl.contains("ent", limit=8)
+    assert not f1.done
+    resolved = pl.flush()
+    assert resolved == 5
+    assert f1.done and f1.value == f2.value
+    assert f3.value is not None
+    assert isinstance(f4.value, list) and isinstance(f5.value, list)
+    # one engine call per operator kind, not per op
+    assert eng.stats.total_calls() == 4
+    assert eng.stats.ops["q1_get"] == 1  # deduped
+    # a second flush with nothing pending is free
+    assert pl.flush() == 0
+
+
+def _nav_outputs(pairs):
+    return [([(r.kind, r.path, r.text) for r in results],
+             (t.tool_calls, t.llm_calls, t.pages_read, t.route,
+              t.budget_exhausted, t.accessed))
+            for results, t in pairs]
+
+
+def test_batched_navigation_matches_unbatched(built_wiki):
+    """Multi-session run ≡ per-query runs, with strictly fewer engine
+    round trips (the planner's whole point)."""
+    pipe, questions = built_wiki
+    qs = [q.text for q in questions[:10]]
+
+    solo_nav = Navigator(pipe.store, HeuristicOracle())
+    solo = [solo_nav.nav(q, UnitBudget(400)) for q in qs]
+
+    many_nav = Navigator(pipe.store, HeuristicOracle())
+    many = many_nav.nav_many(qs, [UnitBudget(400) for _ in qs])
+
+    assert _nav_outputs(solo) == _nav_outputs(many)
+    assert many_nav.engine.stats.total_calls() < solo_nav.engine.stats.total_calls()
+    # sessions actually shared batches: some engine call served many ops
+    assert max(many_nav.engine.stats.max_batch.values()) > 1
+
+
+def test_batched_navigation_device_engine(built_wiki):
+    """The same multi-session run against the DeviceEngine (Pallas path
+    off-TPU = jnp reference) returns identical navigation results."""
+    pipe, questions = built_wiki
+    qs = [q.text for q in questions[:6]]
+    solo = [Navigator(pipe.store, HeuristicOracle()).nav(q, UnitBudget(400))
+            for q in qs]
+    dev = DeviceEngine.from_store(pipe.store)
+    many = Navigator(dev, HeuristicOracle()).nav_many(
+        qs, [UnitBudget(400) for _ in qs])
+    assert _nav_outputs(solo) == _nav_outputs(many)
+    assert dev.stats.total_calls() > 0
