@@ -24,6 +24,7 @@ import numpy as np
 
 from common import build_wiki, emit
 
+from repro.core import records as R
 from repro.core.cache import TieredCache
 from repro.core.engine import DeviceEngine, HostEngine, ShardedPathStore
 from repro.core.navigate import Navigator, UnitBudget
@@ -121,6 +122,74 @@ def _run_engine(tag: str, engine, store, bus, questions, rng,
     return rows
 
 
+def _run_mixed(tag: str, engine, questions, rng, n_queries: int) -> list[tuple]:
+    """ISSUE 2 mixed read/write workload: every wave carries WAVE
+    concurrent navigation sessions PLUS one batch of admissions/unlinks
+    riding the same planner flush.  Reports write amortization (admits
+    served per w_admit engine call), epoch-lag percentiles (waves between
+    a write's admission and its read visibility — the Δ = 1 wave bound)
+    and previous-wave write visibility (must be 1.0)."""
+    nav = Navigator(engine, HeuristicOracle())
+    wave_n = min(WAVE, max(64, n_queries // 4))
+    n_waves = max(2, n_queries // wave_n)
+    writes_per_wave = max(2, wave_n // 4)
+    epoch_lags, wave_ms = [], []
+    visible = checked = 0
+    prev_paths: list[str] = []
+    w_seq = 0
+    for w in range(n_waves):
+        texts = [questions[rng.randrange(len(questions))].text
+                 for _ in range(wave_n)]
+        # this wave's write batch: admissions + an unlink of an old row
+        batch = []
+        for _ in range(writes_per_wave):
+            path = f"/online/w{w_seq % 8}/rec_{w_seq}"
+            batch.append((path, R.FileRecord(
+                name=f"rec_{w_seq}", text=f"online record {w_seq}")))
+            w_seq += 1
+        for p, rec in batch:
+            nav.planner.admit(p, rec)
+        if prev_paths:
+            nav.planner.unlink(prev_paths[0])
+        pinned = engine.epoch
+        t0 = time.perf_counter()
+        nav.nav_many(texts, [UnitBudget(400) for _ in texts])
+        wave_ms.append((time.perf_counter() - t0) * 1000)
+        # run_sessions refreshed at wave end: lag = epochs the wave's
+        # pinned snapshot ended up behind the committed tip
+        epoch_lags.append(engine.epoch - pinned)
+        # writes of wave w-1 must be visible to wave w reads (Δ = 1)
+        if prev_paths:
+            got = engine.q1_get(prev_paths[1:])
+            checked += len(prev_paths) - 1
+            visible += sum(1 for r in got if r is not None)
+        prev_paths = [p for p, _ in batch]
+    st_ = engine.stats
+    admit_calls = max(st_.calls.get("w_admit", 0), 1)
+    rows = [
+        (f"table5_mixed_{tag}_waves", n_waves,
+         f"count;wave={wave_n};writes_per_wave={writes_per_wave}"),
+        (f"table5_mixed_{tag}_wave_latency_avg",
+         round(float(np.mean(wave_ms)), 3), "ms"),
+        (f"table5_mixed_{tag}_write_amortization",
+         round(st_.served.get("w_admit", 0) / admit_calls, 2),
+         "admits_per_engine_call"),
+        (f"table5_mixed_{tag}_epoch_lag_p50",
+         round(_pct(epoch_lags, 50), 3), "waves"),
+        (f"table5_mixed_{tag}_epoch_lag_p95",
+         round(_pct(epoch_lags, 95), 3), "waves"),
+        (f"table5_mixed_{tag}_epoch_lag_max",
+         int(max(epoch_lags)), "waves"),
+        (f"table5_mixed_{tag}_prev_wave_visibility",
+         round(visible / max(checked, 1), 3), "fraction"),
+    ]
+    if "refresh" in st_.ops:
+        rows.append((f"table5_mixed_{tag}_refresh_rows",
+                     st_.ops["refresh"],
+                     f"rows;refreshes={st_.calls['refresh']}"))
+    return rows
+
+
 def run(seed: int = 0, n_queries: int = 1000):
     pipe, docs, questions = build_wiki(n_docs=160, n_questions=100,
                                        seed=seed)
@@ -133,6 +202,12 @@ def run(seed: int = 0, n_queries: int = 1000):
     dev = DeviceEngine.from_store(pipe.store)
     rows += _run_engine("device", dev, pipe.store, pipe.bus,
                         questions, random.Random(seed), n_queries)
+    # mixed read/write workload: online admissions at wave cadence
+    # (fresh engines so read-only and mixed stats don't blend)
+    rows += _run_mixed("host", HostEngine(sharded), questions,
+                       random.Random(seed + 1), n_queries)
+    rows += _run_mixed("device", DeviceEngine.from_store(pipe.store),
+                       questions, random.Random(seed + 1), n_queries)
     emit(rows, header="Table V: online latency + quality on "
                       f"{n_queries} queries (waves of {WAVE})")
     return rows

@@ -1,0 +1,103 @@
+"""Benchmark regression gate for CI.
+
+Parses the ``name,value,unit`` CSV emitted by ``benchmarks/run.py --smoke``,
+writes the parsed rows as a JSON artifact, and fails (exit 1) if any gated
+metric regressed more than ``--factor`` (default 2.0, overridable via the
+``BENCH_GATE_FACTOR`` env var) against the checked-in baseline.
+
+The gated metrics are the Q1 host-engine medians (``timeit_median`` reports
+the median, i.e. p50, per call).  On the first run — no baseline file yet —
+the gate writes the baseline from the current run and passes; the written
+file is meant to be checked in.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+# Q1 host-engine p50 rows (plain + digest-range-sharded host backends).
+GATED_METRICS = (
+    "table2_wikikv_q1",
+    "table2_wikikv_sharded_q1",
+)
+
+
+def parse_rows(text: str) -> dict[str, float]:
+    """Extract ``name -> value`` from the benchmark harness CSV output."""
+    rows: dict[str, float] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith(("#", "=")):
+            continue
+        parts = line.split(",")
+        if len(parts) < 2:
+            continue
+        try:
+            rows[parts[0]] = float(parts[1])
+        except ValueError:
+            continue
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench_output", help="captured benchmarks/run.py output")
+    ap.add_argument("--json-out", default=None, help="write parsed rows as JSON")
+    ap.add_argument("--baseline", default="benchmarks/baseline_smoke.json")
+    ap.add_argument(
+        "--factor",
+        type=float,
+        default=float(os.environ.get("BENCH_GATE_FACTOR", "2.0")),
+        help="max allowed current/baseline ratio (default 2.0)",
+    )
+    args = ap.parse_args()
+
+    rows = parse_rows(Path(args.bench_output).read_text())
+    if not rows:
+        print(f"bench gate: no parseable rows in {args.bench_output}", file=sys.stderr)
+        return 1
+    if args.json_out:
+        Path(args.json_out).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.json_out).write_text(json.dumps(rows, indent=2, sort_keys=True))
+        print(f"bench gate: wrote {len(rows)} rows to {args.json_out}")
+
+    gated = {m: rows[m] for m in GATED_METRICS if m in rows}
+    if not gated:
+        print("bench gate: no gated metrics in this run; nothing to compare")
+        return 0
+
+    baseline_path = Path(args.baseline)
+    if not baseline_path.exists():
+        baseline_path.parent.mkdir(parents=True, exist_ok=True)
+        baseline_path.write_text(json.dumps(gated, indent=2, sort_keys=True))
+        print(f"bench gate: baseline missing — wrote {baseline_path} (check it in)")
+        return 0
+
+    baseline = json.loads(baseline_path.read_text())
+    failures = []
+    for metric, current in sorted(gated.items()):
+        base = baseline.get(metric)
+        if base is None or base <= 0:
+            print(f"bench gate: {metric} has no baseline; skipping")
+            continue
+        ratio = current / base
+        status = "OK" if ratio <= args.factor else "REGRESSED"
+        print(
+            f"bench gate: {metric}: current={current:.2f} baseline={base:.2f} "
+            f"ratio={ratio:.2f}x (limit {args.factor:.2f}x) {status}"
+        )
+        if ratio > args.factor:
+            failures.append(metric)
+    if failures:
+        print(f"bench gate: FAILED — regressed metrics: {failures}", file=sys.stderr)
+        return 1
+    print("bench gate: all gated metrics within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

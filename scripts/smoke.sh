@@ -1,14 +1,22 @@
 #!/usr/bin/env bash
-# CI smoke: tier-1 tests + a cheap benchmark pass over the engine layer.
-# Mirrors the ROADMAP tier-1 verify command; pyproject.toml makes the
-# bare pytest invocation work without PYTHONPATH.
+# CI smoke: tier-1 tests + a cheap benchmark pass over the engine layer,
+# then the bench regression gate.  Both steps use the ROADMAP tier-1
+# PYTHONPATH convention (prepend src, preserve any pre-set PYTHONPATH) so
+# local and CI invocations are byte-identical.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
 echo "== benchmark smoke (engine layer) =="
-PYTHONPATH=src python -m benchmarks.run --smoke
+mkdir -p artifacts
+python -m benchmarks.run --smoke | tee artifacts/BENCH_smoke.txt
+
+echo "== bench gate (Q1 host-engine p50 regression) =="
+python scripts/bench_gate.py artifacts/BENCH_smoke.txt \
+  --json-out artifacts/BENCH_smoke.json \
+  --baseline benchmarks/baseline_smoke.json

@@ -131,15 +131,39 @@ class WikiWriter:
         ``_link_parent`` finds its directory record present."""
         for path, rec in sorted(items, key=lambda it: P.depth(it[0])):
             if path == P.ROOT:
-                self.store.put_record(path, rec)
+                self.put_record(path, rec)  # publishes like every write
                 continue
             self.admit(path, rec)
 
     def ensure_root(self, summary: str = "") -> None:
         if self.store.get(P.ROOT) is None:
-            self.store.put_record(
+            self.put_record(
                 P.ROOT, R.DirRecord(name="", summary=summary,
                                     meta=R.DirMeta(updated_at=self.clock())))
+
+    # ------------------------------------------------------------------
+    # raw write-through primitives (publish on every touched path)
+    # ------------------------------------------------------------------
+    # Every store mutation that flows through the writer publishes an
+    # invalidation for the exact path it touched.  This is what makes the
+    # bus a COMPLETE dirty-path log: the cache tier refreshes from it, and
+    # engine.DeviceEngine materializes its per-epoch TensorDelta from it —
+    # so evolution passes and errorbook repairs (which write through these
+    # primitives) reach the device-resident index at the next refresh.
+    def put_record(self, path: str, rec: R.Record) -> None:
+        path = P.normalize(path, depth_budget=self.store.depth_budget)
+        self.store.put_record(path, rec)
+        if self.bus is not None:
+            self.bus.publish(path)
+
+    def delete_record(self, path: str) -> None:
+        path = P.normalize(path, depth_budget=self.store.depth_budget)
+        self.store.delete_record(path)
+        if self.bus is not None:
+            self.bus.publish(path)
+
+    def get(self, path: str) -> Optional[R.Record]:
+        return self.store.get(path)
 
     def _link_parent(self, par: str, segment: str, *, is_dir: bool) -> None:
         with self._cas_lock:
@@ -158,6 +182,11 @@ class WikiWriter:
             updated = replace(updated, meta=replace(
                 updated.meta, updated_at=self.clock()))
             self.store.put_record(par, updated)
+            # publish every auto-created/updated ancestor level, not just
+            # the immediate parent — the device delta must see the whole
+            # chain of directory records whose child lists changed
+            if self.bus is not None:
+                self.bus.publish(par)
 
     # ------------------------------------------------------------------
     # page-level in-place rewrite under OCC (version CAS)

@@ -29,6 +29,14 @@ realized as "O(1) engine calls per *batch* of queries"):
   This is continuous batching for storage ops, mirroring the serving
   engine's token batching.
 
+* **Online writes** (ISSUE 2) ride the same waves: ``planner.admit/
+  update/unlink`` → batched ``admit_many``/``update_many``/``unlink_many``
+  round trips through the §IV-C ``WikiWriter`` (CAS + invalidation).  A
+  flush runs reads before writes and ``refresh()`` commits between waves,
+  so every read wave pins one epoch (staleness Δ = 1 wave); the
+  ``DeviceEngine`` refreshes incrementally via ``tensorstore.apply_delta``
+  instead of re-freezing.
+
 Parity contract (tested in tests/test_engine.py): for any store state
 reachable through the §IV-C write protocol, ``HostEngine`` and
 ``DeviceEngine`` frozen from the same store return identical results for
@@ -38,16 +46,23 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Iterator, Optional, Sequence
+from typing import Callable, Iterator, Optional, Sequence
 
 import numpy as np
 
 from . import paths as P
 from . import records as R
+from .consistency import CASConflict, InvalidationBus, WikiWriter
 from .store import KVEngine, MemKV, PathStore, _segment_tokens
 
 # operator names used for stats keys
 Q1, Q2, Q3, Q4, Q4C = "q1_get", "q2_ls", "q3_navigate", "q4_search", "q4_contains"
+# write operators (batched through the same planner/engine round trips)
+W_ADMIT, W_UPDATE, W_UNLINK = "w_admit", "w_update", "w_unlink"
+# epoch refresh accounting (rows applied per refresh)
+REFRESH = "refresh"
+READ_OPS = (Q1, Q2, Q3, Q4, Q4C)
+WRITE_OPS = (W_ADMIT, W_UPDATE, W_UNLINK)
 
 
 # ---------------------------------------------------------------------------
@@ -98,11 +113,36 @@ class EngineStats:
 # the batched operator contract
 # ---------------------------------------------------------------------------
 class QueryEngine:
-    """Batched Q1–Q4 execution.  One method call == one storage round trip."""
+    """Batched Q1–Q4 execution plus the batched write path.
+
+    One method call == one storage round trip.  Write batches route
+    through a ``WikiWriter`` (parent-after-child admission, reverse-order
+    unlink, OCC CAS updates, invalidation publishes), so every §IV-C
+    guarantee holds for engine-mediated writes too.
+
+    **Epoch contract** — ``epoch`` is a monotone counter of committed
+    write generations.  The planner executes a wave's read batches before
+    its write batches, and ``refresh()`` (called by the wave driver
+    *between* waves) commits visibility.  Upper bound both tiers share:
+    a write admitted in wave k is visible to every read of wave k+1
+    (Δ = 1 wave).  The lower bound (no read of wave k sees wave-k
+    writes) is snapshot-exact on ``DeviceEngine`` — its tensors are
+    frozen until ``refresh()``, so even a multi-round wave pins one
+    epoch.  ``HostEngine`` reads hit the live store, so the lower bound
+    holds per *flush* (round) only: a later round of the same wave may
+    already observe an earlier round's admissions.  That is the paper's
+    host-tier semantics — Theorem 2 (no partial reads) still holds for
+    every interleaving via the write protocol itself, which is what the
+    host-side property tests assert.
+    """
 
     def __init__(self):
         self.stats = EngineStats()
+        self.epoch = 0
+        self.writer: WikiWriter | None = None
+        self._pending_writes = 0
 
+    # -- reads -------------------------------------------------------------
     def q1_get(self, paths: Sequence[str]) -> list[Optional[R.Record]]:
         raise NotImplementedError
 
@@ -120,6 +160,94 @@ class QueryEngine:
     def q4_contains(self, tokens: Sequence[str],
                     limit: int | None = None) -> list[list[str]]:
         raise NotImplementedError
+
+    # -- writes ------------------------------------------------------------
+    def _require_writer(self) -> WikiWriter:
+        if self.writer is None:
+            raise RuntimeError(
+                f"{type(self).__name__} has no writer attached — "
+                "construct it with a backing store to enable writes")
+        return self.writer
+
+    def admit_many(self, items: Sequence[tuple[str, R.Record]]
+                   ) -> list[R.Record | Exception]:
+        """One batched admission round trip.  Items apply parents-first
+        (depth order, stable) so a parent and its child admitted in the
+        same wave never race the auto-created parent chain.  A per-item
+        validation failure (depth budget, malformed path, non-directory
+        parent) resolves to the exception instead of poisoning the batch."""
+        w = self._require_writer()
+        self.stats.record(W_ADMIT, len(items))
+        budget = w.store.depth_budget
+        out: list[R.Record | Exception] = [rec for _, rec in items]
+        order = sorted(range(len(items)), key=lambda i: P.depth(items[i][0]))
+        for i in order:
+            path, rec = items[i]
+            try:
+                if P.normalize(path, depth_budget=budget) == P.ROOT:
+                    w.put_record(P.ROOT, rec)
+                else:
+                    w.admit(path, rec)
+            except (P.PathError, ValueError) as e:
+                out[i] = e
+        self._note_writes(len(items))
+        return out
+
+    def update_many(self, updates: Sequence[
+            tuple[str, Callable[[R.FileRecord], R.FileRecord]]],
+            max_retries: int = 8) -> list[R.Record | CASConflict]:
+        """One batched OCC round trip: each (path, mutate) runs the
+        writer's version-CAS loop; a conflict that exhausts its retries
+        resolves to the ``CASConflict`` instance instead of raising, so
+        one stale page never poisons the rest of the batch."""
+        w = self._require_writer()
+        self.stats.record(W_UPDATE, len(updates))
+        out: list[R.Record | Exception] = []
+        for path, mutate in updates:
+            try:
+                out.append(w.update_file(path, mutate,
+                                         max_retries=max_retries))
+            except (CASConflict, KeyError, P.PathError) as e:
+                # KeyError: no file record at the path (e.g. unlinked by
+                # an earlier run of this same wave) — a per-item outcome,
+                # like an exhausted CAS, not a batch failure
+                out.append(e)
+        self._note_writes(len(updates))
+        return out
+
+    def unlink_many(self, paths: Sequence[str]
+                    ) -> list[bool | P.PathError]:
+        """One batched unlink round trip, deepest-first so a subtree and
+        its root unlinked in the same wave stay parent-link-consistent.
+        Returns, per path, whether a record existed; an invalid unlink
+        (the root — it has no parent to unlink from) resolves to the
+        ``PathError`` instead of poisoning the batch."""
+        w = self._require_writer()
+        self.stats.record(W_UNLINK, len(paths))
+        out: list[bool | P.PathError] = [False] * len(paths)
+        order = sorted(range(len(paths)), key=lambda i: -P.depth(paths[i]))
+        for i in order:
+            try:
+                out[i] = w.get(paths[i]) is not None
+                w.unlink(paths[i])
+            except P.PathError as e:
+                out[i] = e
+        self._note_writes(len(paths))
+        return out
+
+    # -- epoch refresh -----------------------------------------------------
+    def _note_writes(self, n: int) -> None:
+        if n > 0:
+            self._pending_writes += n
+
+    def refresh(self) -> int:
+        """Commit admitted writes to the read view and return the new
+        epoch.  Called by wave drivers between waves; a no-op (same
+        epoch) when nothing was written since the last refresh."""
+        if self._pending_writes:
+            self._pending_writes = 0
+            self.epoch += 1
+        return self.epoch
 
 
 # ---------------------------------------------------------------------------
@@ -242,11 +370,25 @@ class ShardedPathStore:
 # host engine
 # ---------------------------------------------------------------------------
 class HostEngine(QueryEngine):
-    """Batched operators over a (possibly sharded) host PathStore."""
+    """Batched operators over a (possibly sharded) host PathStore.
 
-    def __init__(self, store: "PathStore | ShardedPathStore"):
+    Writes route through a ``WikiWriter`` over the same store; pass an
+    existing writer (or bus) to share its invalidation stream with other
+    tiers (cache, device mirror).  ``refresh()`` drains the bus, so cache
+    invalidations are delivered at wave cadence — the same Δ = 1 wave
+    bound the device engine gives its tensor mirror."""
+
+    def __init__(self, store: "PathStore | ShardedPathStore",
+                 writer: WikiWriter | None = None,
+                 bus: InvalidationBus | None = None):
         super().__init__()
         self.store = store
+        self.writer = writer if writer is not None else WikiWriter(store, bus=bus)
+
+    def refresh(self) -> int:
+        if self.writer.bus is not None:
+            self.writer.bus.drain()
+        return super().refresh()
 
     def q1_get(self, paths):
         self.stats.record(Q1, len(paths))
@@ -280,23 +422,60 @@ def _token_hash(token: str) -> int:
 
 
 class DeviceEngine(QueryEngine):
-    """Batched operators over the frozen tensor index.
+    """Batched operators over the epoch-versioned tensor index.
 
     Q1/Q3/keyword routing run through ``kernels.ops.path_lookup`` (Pallas
     on TPU, binary-search reference elsewhere); Q4 prefix scans run
     through ``kernels.ops.prefix_search``.  Record payloads are resolved
     from a host-side row table — the row id IS the payload pointer, so the
     device op does all the addressing work.
+
+    **Incremental refresh** — when constructed over a backing store, the
+    engine's writes (and any other writer sharing its ``InvalidationBus``,
+    e.g. evolution passes and errorbook repairs) accumulate as dirty-path
+    invalidations.  ``refresh()`` drains the bus, materializes ONE
+    ``TensorDelta`` (O(|dirty|) point gets against the store — no
+    full-store re-freeze pass), applies it to the resident ``TensorWiki``
+    and bumps ``epoch``.  Reads between two refreshes all execute against
+    the same frozen epoch, so an in-flight wave observes one consistent
+    snapshot; the applied deltas are kept in ``delta_log``.
     """
 
+    #: refresh history retained for diagnostics/benchmarks
+    DELTA_LOG_KEEP = 16
+
     def __init__(self, wiki, records: list[Optional[R.Record]],
-                 depth_budget: int | None = P.DEFAULT_DEPTH_BUDGET):
+                 depth_budget: int | None = P.DEFAULT_DEPTH_BUDGET,
+                 store: "PathStore | ShardedPathStore | None" = None,
+                 writer: WikiWriter | None = None,
+                 bus: InvalidationBus | None = None):
         super().__init__()
+        self.depth_budget = depth_budget
+        self.store = store
+        self.delta_log: list = []
+        self._dirty: set[str] = set()
+        if store is not None:
+            if writer is not None:
+                self.writer = writer
+                if self.writer.bus is None:
+                    self.writer.bus = bus if bus is not None else InvalidationBus()
+            else:
+                self.writer = WikiWriter(
+                    store, bus=bus if bus is not None else InvalidationBus())
+            self.writer.bus.subscribe(self._note_dirty)
+        self._install(wiki, records)
+
+    def _note_dirty(self, ev) -> None:
+        self._dirty.add(ev.path)
+
+    def _install(self, wiki, records: list[Optional[R.Record]]) -> None:
+        """(Re)build every derived device structure for a new snapshot:
+        padded digest table + token-digest table/CSR.  Called once at
+        construction and once per committed refresh."""
         import jax.numpy as jnp
         from ..kernels.ops import pad_keys
         self.wiki = wiki
         self.records = records
-        self.depth_budget = depth_budget
         # pad the digest table once so the Pallas kernel path is eligible
         khi, klo = pad_keys(np.asarray(wiki.keys_hi), np.asarray(wiki.keys_lo))
         self._khi = jnp.asarray(khi)
@@ -328,12 +507,57 @@ class DeviceEngine(QueryEngine):
 
     # ------------------------------------------------------------------
     @classmethod
-    def from_store(cls, store: "PathStore | ShardedPathStore") -> "DeviceEngine":
+    def from_store(cls, store: "PathStore | ShardedPathStore",
+                   writer: WikiWriter | None = None,
+                   bus: InvalidationBus | None = None) -> "DeviceEngine":
         """Freeze the store into the device layout + host payload table
-        (the offline pipeline's snapshot step) — one store pass."""
+        (the offline pipeline's snapshot step) — one store pass.  The
+        engine stays attached to the store: subsequent writes flow
+        through its writer and land in the tensor index via incremental
+        ``refresh()`` deltas, never another full freeze."""
         from . import tensorstore as TS
         wiki, recs = TS.freeze_with_records(store)
-        return cls(wiki, recs, depth_budget=store.depth_budget)
+        return cls(wiki, recs, depth_budget=store.depth_budget,
+                   store=store, writer=writer, bus=bus)
+
+    # ------------------------------------------------------------------
+    def refresh(self) -> int:
+        """Apply all writes since the last refresh as one ``TensorDelta``.
+
+        Storage cost is O(|dirty paths|) point gets; the array rebuild is
+        pure in-memory host work with zero store round trips (contrast
+        ``from_store``: a full namespace scan + N gets).  No-op when the
+        bus is clean.  The in-memory rebuild itself is still O(N) per
+        committed refresh (re-sort + token-index rederivation) — at very
+        large N, in-place row patching or a refresh cadence > 1 wave is
+        the next lever (ROADMAP open item)."""
+        if self.writer is not None and self.writer.bus is not None:
+            self.writer.bus.drain()
+        if not self._dirty:
+            return self.epoch
+        from . import tensorstore as TS
+        resident = set(self.wiki.paths)
+        upserts: list[tuple[str, R.Record]] = []
+        unlinks: list[str] = []
+        for p in sorted(self._dirty):
+            rec = self.store.get(p)
+            if rec is not None:
+                upserts.append((p, rec))
+            elif p in resident:
+                unlinks.append(p)
+        self._dirty.clear()
+        self._pending_writes = 0
+        if not upserts and not unlinks:
+            return self.epoch
+        delta = TS.TensorDelta(epoch=self.epoch + 1,
+                               upserts=upserts, unlinks=unlinks)
+        wiki, recs = TS.apply_delta(self.wiki, self.records, delta)
+        self._install(wiki, recs)
+        self.delta_log.append(delta)
+        del self.delta_log[:-self.DELTA_LOG_KEEP]
+        self.epoch += 1
+        self.stats.record(REFRESH, len(delta))
+        return self.epoch
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -530,18 +754,29 @@ class OpFuture:
 
 
 class BatchPlanner:
-    """Collects Q1–Q4 operations from many concurrent sessions and
-    executes each operator's pending set in ONE engine call per flush.
+    """Collects Q1–Q4 operations — and now writes — from many concurrent
+    sessions and executes each operator's pending set in ONE engine call
+    per flush.
 
-    Identical operations from different sessions are deduplicated into a
-    single batch slot (they share the result), so a flush costs at most
-    five engine round trips — one per live operator — regardless of how
-    many sessions are in flight.
+    Identical read operations from different sessions are deduplicated
+    into a single batch slot (they share the result), so a flush costs at
+    most five read round trips — one per live operator — regardless of
+    how many sessions are in flight.  Writes are collected in enqueue
+    order and are never deduplicated (two admissions of the same path are
+    two intents, applied in order): the flush batches them as maximal
+    same-kind runs, preserving cross-kind order, so unlink-then-readmit
+    keeps its meaning.
+
+    **Wave semantics** (the epoch contract of ``QueryEngine``): a flush
+    executes all read batches FIRST, then the write batches.  Reads of a
+    flush therefore never observe that flush's writes; visibility arrives
+    at the driver's ``engine.refresh()`` between waves (Δ = 1 wave).
     """
 
     def __init__(self, engine: QueryEngine):
         self.engine = engine
         self._pending: dict[str, dict[object, list[OpFuture]]] = {}
+        self._writes: list[tuple[str, object, OpFuture]] = []
         self._lock = threading.Lock()
         self.flushes = 0
 
@@ -567,21 +802,52 @@ class BatchPlanner:
     def contains(self, token: str, limit: int | None = None) -> OpFuture:
         return self._enqueue(Q4C, (token, limit), token)
 
+    # -- write futures ------------------------------------------------------
+    def _enqueue_write(self, op: str, payload) -> OpFuture:
+        fut = OpFuture(op, payload)
+        with self._lock:
+            self._writes.append((op, payload, fut))
+        return fut
+
+    def admit(self, path: str, rec: R.Record) -> OpFuture:
+        """Batched §IV-C admission; resolves to the admitted record."""
+        return self._enqueue_write(W_ADMIT, (path, rec))
+
+    def update(self, path: str,
+               mutate: Callable[[R.FileRecord], R.FileRecord]) -> OpFuture:
+        """Batched OCC update; resolves to the new record, or to the
+        ``CASConflict`` instance if retries were exhausted."""
+        return self._enqueue_write(W_UPDATE, (path, mutate))
+
+    def unlink(self, path: str) -> OpFuture:
+        """Batched reverse-order unlink; resolves to existed: bool."""
+        return self._enqueue_write(W_UNLINK, path)
+
     def pending_ops(self) -> int:
-        return sum(len(futs) for by_key in self._pending.values()
-                   for futs in by_key.values())
+        return (sum(len(futs) for by_key in self._pending.values()
+                    for futs in by_key.values())
+                + len(self._writes))
+
+    def pending_writes(self) -> int:
+        return len(self._writes)
 
     # -- execution ----------------------------------------------------------
     def flush(self) -> int:
-        """Execute every pending batch; one engine call per operator kind.
-        Returns the number of futures resolved."""
+        """Execute every pending batch; one engine call per operator kind,
+        reads before writes.  Returns the number of futures resolved."""
         with self._lock:
             pending, self._pending = self._pending, {}
-        if not pending:
+            writes, self._writes = self._writes, []
+        if not pending and not writes:
             return 0
         self.flushes += 1
         resolved = 0
-        for op, by_key in pending.items():
+        # reads first — every read of this wave sees the epoch pinned at
+        # wave start, untouched by this wave's writes
+        for op in READ_OPS:
+            by_key = pending.get(op)
+            if not by_key:
+                continue
             keys = list(by_key)
             if op == Q1:
                 results = self.engine.q1_get(keys)
@@ -602,6 +868,39 @@ class BatchPlanner:
                     n_served += 1
             self.engine.stats.record_served(op, n_served)
             resolved += n_served
+        resolved += self._flush_writes(writes)
+        return resolved
+
+    def _flush_writes(self, writes) -> int:
+        """Execute the ordered write log as maximal same-kind runs: one
+        engine call per run, cross-kind enqueue order preserved.  A
+        homogeneous wave (the common case) still costs one round trip;
+        an unlink-then-readmit of the same path keeps its meaning."""
+        methods = {W_ADMIT: self.engine.admit_many,
+                   W_UPDATE: self.engine.update_many,
+                   W_UNLINK: self.engine.unlink_many}
+        resolved = 0
+        i = 0
+        while i < len(writes):
+            op = writes[i][0]
+            j = i
+            while j < len(writes) and writes[j][0] == op:
+                j += 1
+            batch = writes[i:j]
+            try:
+                results = methods[op]([payload for _, payload, _ in batch])
+            except Exception as e:
+                # the engines resolve expected per-item failures to
+                # exception values; anything that still escapes must not
+                # leave this wave's futures dangling forever — resolve
+                # them to the failure and keep the wave going
+                results = [e] * len(batch)
+            for (_, _, fut), value in zip(batch, results):
+                fut.value = value
+                fut.done = True
+            self.engine.stats.record_served(op, len(batch))
+            resolved += len(batch)
+            i = j
         return resolved
 
     @staticmethod
@@ -626,15 +925,32 @@ class BatchPlanner:
 def drive(gen, planner: BatchPlanner):
     """Run one session generator to completion, flushing the planner at
     every yield point (the single-session degenerate case of the
-    multi-session scheduler in navigate.run_sessions)."""
+    multi-session scheduler in navigate.run_sessions).  The session is
+    one wave: any writes it admitted become visible at the closing
+    ``refresh()``."""
     try:
         while True:
             next(gen)
             planner.flush()
     except StopIteration as e:
+        planner.engine.refresh()
         return e.value
+
+
+def admit_wave(planner: BatchPlanner,
+               items: Sequence[tuple[str, R.Record]]) -> list[OpFuture]:
+    """Writer-session helper: enqueue a batch of admissions that will ride
+    the next wave's flush exactly like reader sessions' ops do."""
+    return [planner.admit(p, rec) for p, rec in items]
+
+
+def unlink_wave(planner: BatchPlanner, paths: Sequence[str]) -> list[OpFuture]:
+    """Writer-session helper for batched unlinks."""
+    return [planner.unlink(p) for p in paths]
 
 
 __all__ = ["QueryEngine", "HostEngine", "DeviceEngine", "ShardedPathStore",
            "BatchPlanner", "OpFuture", "EngineStats", "drive",
-           "Q1", "Q2", "Q3", "Q4", "Q4C"]
+           "admit_wave", "unlink_wave",
+           "Q1", "Q2", "Q3", "Q4", "Q4C",
+           "W_ADMIT", "W_UPDATE", "W_UNLINK", "REFRESH"]

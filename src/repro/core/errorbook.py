@@ -60,7 +60,9 @@ class ErrorBook:
         self.repairs[kind] = self.repairs.get(kind, 0) + n
 
     # -- persistence ----------------------------------------------------
-    def save(self, store: PathStore) -> None:
+    # ``store`` may be a PathStore or a WikiWriter; the writer path also
+    # publishes the invalidation so the device mirror/cache stay fresh.
+    def save(self, store) -> None:
         store.put_record(ERRORBOOK_PATH, R.FileRecord(
             name="errorbook",
             text=json.dumps({
@@ -153,7 +155,7 @@ def deterministic_repair(writer: WikiWriter, book: ErrorBook,
             continue
         new_text = rec.text.replace(f"[[{target}]]", target.rsplit("/", 1)[-1])
         if new_text != rec.text:
-            store.put_record(path, replace(rec, text=new_text))
+            writer.put_record(path, replace(rec, text=new_text))
             fixed += 1
         if target not in book.bad_link_targets:
             book.bad_link_targets.append(target)
@@ -164,7 +166,7 @@ def deterministic_repair(writer: WikiWriter, book: ErrorBook,
         rec = store.get(path)
         if not isinstance(rec, R.FileRecord):
             continue
-        store.put_record(path, replace(
+        writer.put_record(path, replace(
             rec, meta=replace(rec.meta,
                               sources=[s for s in rec.meta.sources
                                        if P.is_prefix(P.SOURCES_PREFIX, s)])))
@@ -175,7 +177,7 @@ def deterministic_repair(writer: WikiWriter, book: ErrorBook,
         rec = store.get(path)
         if not isinstance(rec, R.FileRecord):
             continue
-        store.put_record(path, replace(
+        writer.put_record(path, replace(
             rec, meta=replace(rec.meta,
                               confidence=min(rec.meta.confidence, 0.3))))
         book.add_rule("facts-require-citations")
@@ -224,5 +226,5 @@ def run_errorbook(writer: WikiWriter, oracle: Oracle,
     deterministic_repair(writer, book, report)
     if with_llm_pass:
         llm_repair(writer, oracle, book, report)
-    book.save(writer.store)
+    book.save(writer)
     return book, report

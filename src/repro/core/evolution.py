@@ -107,8 +107,10 @@ class CoAccessSketch:
                 mi += pxy * math.log(pxy / (px * py))
         return mi
 
-    # persistence in the same store (reserved, unadvertised)
-    def save(self, store: PathStore) -> None:
+    # persistence in the same store (reserved, unadvertised).  ``store``
+    # may be a PathStore or a WikiWriter — writing through the writer
+    # additionally publishes the invalidation (device mirror + cache).
+    def save(self, store) -> None:
         store.put_record(COACCESS_PATH, R.FileRecord(
             name="coaccess",
             text=json.dumps({"n": self.n_queries, "m": self.marginal,
@@ -134,15 +136,11 @@ def apply_access_log(writer: WikiWriter, log: AccessLog) -> CoAccessSketch:
         rec = writer.store.get(path)
         if rec is None:
             continue
-        if isinstance(rec, R.FileRecord):
-            writer.store.put_record(path, replace(
-                rec, meta=replace(rec.meta, access_count=rec.meta.access_count + c)))
-        else:
-            writer.store.put_record(path, replace(
-                rec, meta=replace(rec.meta, access_count=rec.meta.access_count + c)))
+        writer.put_record(path, replace(
+            rec, meta=replace(rec.meta, access_count=rec.meta.access_count + c)))
     sketch = CoAccessSketch.load(writer.store)
     sketch.merge_log(log)
-    sketch.save(writer.store)
+    sketch.save(writer)
     return sketch
 
 
@@ -160,9 +158,14 @@ class OpResult:
 
 
 class _Snapshot:
-    """Record-level undo log for exact Arbiter verification."""
+    """Record-level undo log for exact Arbiter verification.
 
-    def __init__(self, store: PathStore):
+    ``store`` may be a ``PathStore`` or a ``WikiWriter`` (both expose
+    get/put_record/delete_record); through a writer, rollback writes
+    publish invalidations too — a rolled-back operator trial must reach
+    the device mirror and cache just like a committed one."""
+
+    def __init__(self, store):
         self.store = store
         self.saved: dict[str, R.Record | None] = {}
 
@@ -197,9 +200,11 @@ def merge_candidates(store: PathStore, sketch: CoAccessSketch,
     return out
 
 
-def _move_subtree(store: PathStore, src: str, dst: str, snap: _Snapshot) -> None:
+def _move_subtree(store, src: str, dst: str, snap: _Snapshot) -> None:
     """Rename src → dst by copy-then-delete, children-first writes so a
-    concurrent reader never follows an advertised link to a missing record."""
+    concurrent reader never follows an advertised link to a missing record.
+    ``store`` is a PathStore or WikiWriter (writer-mediated moves publish
+    every touched path)."""
     rec = store.get(src)
     if rec is None:
         return
@@ -250,9 +255,10 @@ def apply_dimension_merge(writer: WikiWriter, d1: str, d2: str,
     snap.touch(d1)
     snap.touch(d2)
     snap.touch(P.ROOT)
-    # move children of d2 under d1 (children first)
+    # move children of d2 under d1 (children first); writer-mediated so
+    # every rewritten path publishes an invalidation
     for seg in r2.children():
-        _move_subtree(store, P.child(d2, seg), P.child(d1, seg), snap)
+        _move_subtree(writer, P.child(d2, seg), P.child(d1, seg), snap)
     # refresh d1 record: union handled by _move_subtree linking below
     r1b = store.get(d1)
     assert isinstance(r1b, R.DirRecord)
@@ -265,16 +271,12 @@ def apply_dimension_merge(writer: WikiWriter, d1: str, d2: str,
         summary=(r1b.summary + " " + r2.summary).strip(),
         meta=replace(r1b.meta,
                      access_count=r1b.meta.access_count + r2.meta.access_count))
-    store.put_record(d1, r1b)
+    writer.put_record(d1, r1b)
     # unlink d2 from the root, then delete its record (parent-first removal)
     root = store.get(P.ROOT)
     if isinstance(root, R.DirRecord):
-        store.put_record(P.ROOT, root.without_child(P.basename(d2)))
-    store.delete_record(d2)
-    if writer.bus is not None:
-        writer.bus.publish(d1)
-        writer.bus.publish(d2)
-        writer.bus.publish(P.ROOT)
+        writer.put_record(P.ROOT, root.without_child(P.basename(d2)))
+    writer.delete_record(d2)
 
 
 # ---------------------------------------------------------------------------
@@ -358,7 +360,7 @@ def apply_page_split(writer: WikiWriter, cand: SplitCandidate,
     for head in cand.heads:
         sub = P.child(cand.path, head)
         snap.touch(sub)
-        store.put_record(sub, R.FileRecord(
+        writer.put_record(sub, R.FileRecord(
             name=head, text="\n\n".join(buckets[head]),
             meta=replace(rec.meta, version=0, access_count=per_access,
                          confidence=min(1.0, rec.meta.confidence + 0.2))))
@@ -368,9 +370,7 @@ def apply_page_split(writer: WikiWriter, cand: SplitCandidate,
         meta=R.DirMeta(updated_at=writer.clock(),
                        entry_count=len(cand.heads),
                        access_count=rec.meta.access_count))
-    store.put_record(cand.path, hub)
-    if writer.bus is not None:
-        writer.bus.publish(cand.path)
+    writer.put_record(cand.path, hub)
 
 
 # ---------------------------------------------------------------------------
@@ -391,7 +391,7 @@ def evolution_pass(writer: WikiWriter, oracle: Oracle, params: SchemaParams,
             break
         if d1 in committed_supports or d2 in committed_supports:
             continue  # node-disjoint commit set (Theorem 1 requirement)
-        snap = _Snapshot(store)
+        snap = _Snapshot(writer)
         apply_dimension_merge(writer, d1, d2, snap)
         after = schema_cost(store, params)
         delta = after.total - before.total
@@ -422,7 +422,7 @@ def evolution_pass(writer: WikiWriter, oracle: Oracle, params: SchemaParams,
         if any(P.is_prefix(s, c.path) or P.is_prefix(c.path, s)
                for s in committed_supports):
             continue
-        snap = _Snapshot(store)
+        snap = _Snapshot(writer)
         apply_page_split(writer, c, snap)
         after = schema_cost(store, params)
         delta = after.total - before.total

@@ -404,6 +404,10 @@ def run_sessions(planner: BatchPlanner, gens: list[NavSession]
                 out[i] = e.value
         planner.flush()
         active = still
+    # one wave == one run_sessions call: writes admitted during the wave
+    # (writer sessions sharing this planner) commit to the read view here,
+    # so the NEXT wave pins the fresh epoch — staleness Δ = 1 wave
+    planner.engine.refresh()
     for i, res in enumerate(out):
         if res is not None:
             res[1].rounds = rounds[i]

@@ -33,7 +33,7 @@ steps.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 
 import numpy as np
@@ -97,6 +97,19 @@ def freeze_with_records(store: PathStore,
     """``freeze`` plus the decoded records in row order — one store pass
     total, so engine.DeviceEngine snapshots don't pay 3×N point gets."""
     all_paths = sorted(store.all_paths())
+    if not all_paths:
+        raise ValueError("empty store")
+    return _materialize(all_paths, [store.get(p) for p in all_paths],
+                        max_path_bytes)
+
+
+def _materialize(all_paths: list[str], all_recs: list,
+                 max_path_bytes: int = MAX_PATH_BYTES
+                 ) -> tuple[TensorWiki, list]:
+    """Build the device layout from an in-memory (path, record) table —
+    the shared tail of ``freeze_with_records`` (which sources records from
+    a store pass) and ``apply_delta`` (which sources them from the
+    previous snapshot + a TensorDelta, with zero store round trips)."""
     n = len(all_paths)
     if n == 0:
         raise ValueError("empty store")
@@ -105,13 +118,12 @@ def freeze_with_records(store: PathStore,
     kinds = np.zeros((n,), dtype=np.int8)
     access = np.zeros((n,), dtype=np.int32)
     depths = np.zeros((n,), dtype=np.int8)
-    recs: list[R.Record | None] = []
+    recs: list[R.Record | None] = list(all_recs)
     for i, p in enumerate(all_paths):
         hi, lo = _digest_pair(p)
         digests[i] = (hi, lo)
         toks[i] = pack_path(p, max_path_bytes)
-        rec = store.get(p)
-        recs.append(rec)
+        rec = recs[i]
         kinds[i] = 0 if isinstance(rec, R.DirRecord) else 1
         access[i] = 0 if rec is None else rec.meta.access_count
         depths[i] = P.depth(p)
@@ -162,6 +174,56 @@ def freeze_with_records(store: PathStore,
         paths=sorted_paths,
     )
     return wiki, sorted_recs
+
+
+# ---------------------------------------------------------------------------
+# epoch-versioned incremental refresh
+# ---------------------------------------------------------------------------
+@dataclass
+class TensorDelta:
+    """One epoch's worth of row mutations against a ``TensorWiki``.
+
+    ``upserts`` carries appended *and* overwritten rows (the row table is
+    keyed by path, so one list covers both); ``unlinks`` lists removed
+    paths.  ``epoch`` is the epoch this delta produces when applied.  The
+    log of applied deltas is the device-tier analogue of the host
+    invalidation stream: bounded staleness Δ = one refresh cadence.
+    """
+
+    epoch: int
+    upserts: list[tuple[str, object]] = field(default_factory=list)
+    unlinks: list[str] = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.upserts) + len(self.unlinks)
+
+
+def apply_delta(wiki: TensorWiki, records: list,
+                delta: TensorDelta) -> tuple[TensorWiki, list]:
+    """Apply a ``TensorDelta`` to a snapshot, producing the next epoch's
+    ``TensorWiki`` + row-aligned record table.
+
+    This is the *incremental* refresh path: it never touches the backing
+    store (contrast ``freeze_with_records``: one full namespace scan plus
+    N point gets).  All inputs come from the previous snapshot and the
+    delta itself; the array rebuild is pure in-memory host work, so the
+    storage-layer cost of a refresh is exactly the O(|Δ|) point gets the
+    caller spent materializing the delta."""
+    by_path: dict[str, object] = dict(zip(wiki.paths, records))
+    for p in delta.unlinks:
+        by_path.pop(p, None)
+    for p, rec in delta.upserts:
+        by_path[p] = rec
+    if not by_path:
+        # an empty TensorWiki is unrepresentable (same invariant as
+        # freeze); surface the cause instead of _materialize's generic
+        # "empty store" so a root-unlinking wave is debuggable
+        raise ValueError(
+            f"TensorDelta for epoch {delta.epoch} unlinks every resident "
+            "row — refusing to commit an empty table")
+    paths = sorted(by_path)
+    return _materialize(paths, [by_path[p] for p in paths],
+                        int(wiki.path_tokens.shape[1]))
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,7 @@ Every per-query trace (tool calls, pages read) feeds the Table V metrics.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -60,7 +61,8 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, tokenizer: HashTokenizer,
                  store, oracle: Oracle,
                  cache: TieredCache | None = None,
-                 batch_size: int = 4, max_len: int = 512, mesh=None):
+                 batch_size: int = 4, max_len: int = 512, mesh=None,
+                 write_batch: int = 8):
         self.cfg = cfg
         self.params = params
         self.tok = tokenizer
@@ -73,6 +75,11 @@ class ServingEngine:
         self.oracle = oracle
         self.batch_size = batch_size
         self.max_len = max_len
+        # online write path: queued admissions/unlinks drain into the
+        # planner at most ``write_batch`` per decode step, so writes batch
+        # at token cadence and never starve the read wave
+        self.write_batch = write_batch
+        self._write_q: deque[tuple[str, str, object]] = deque()
         self._serve = jax.jit(M.make_serve_step(cfg, mesh))
         self.state = T.init_decode_state(cfg, batch_size, max_len)
         self.lengths = jnp.zeros((batch_size,), jnp.int32)
@@ -128,9 +135,38 @@ class ServingEngine:
         self._decoding[slot] = True
 
     # ------------------------------------------------------------------
+    # online writes: enqueue now, ride the next step's planner wave
+    # ------------------------------------------------------------------
+    def submit_admit(self, path: str, rec) -> None:
+        """Queue a §IV-C admission; applied ≤ write_batch per step."""
+        self._write_q.append(("admit", path, rec))
+
+    def submit_unlink(self, path: str) -> None:
+        """Queue a reverse-order unlink; applied ≤ write_batch per step."""
+        self._write_q.append(("unlink", path, None))
+
+    def pending_writes(self) -> int:
+        return len(self._write_q) + self.planner.pending_writes()
+
+    def _enqueue_write_batch(self) -> None:
+        """Move one write batch from the queue into the planner so it
+        executes in this step's flush (after the step's reads — the wave
+        ordering that keeps reads pinned to the step-start epoch)."""
+        for _ in range(min(self.write_batch, len(self._write_q))):
+            kind, path, rec = self._write_q.popleft()
+            if kind == "admit":
+                self.planner.admit(path, rec)
+            else:
+                self.planner.unlink(path)
+
+    # ------------------------------------------------------------------
     def _step_storage(self) -> None:
         """Advance every navigating lane to its next storage dependency,
-        then drain ONE planner batch for all of them together."""
+        then drain ONE planner batch — reads plus one write batch — for
+        all of them together.  The closing ``refresh()`` commits this
+        step's writes to the read view, so a decode step is one wave:
+        epoch staleness is bounded by Δ = 1 step."""
+        self._enqueue_write_batch()
         finished: list[tuple[int, object, float]] = []
         for i, nav_state in enumerate(self._nav):
             if nav_state is None:
@@ -142,13 +178,16 @@ class ServingEngine:
                 finished.append((i, e.value, t0))
                 self._nav[i] = None
         self.planner.flush()
+        self.engine.refresh()
         for slot, value, t0 in finished:
             self._finish_nav(slot, value, t0)
 
     def step(self) -> list[Request]:
-        """One serving step: one storage batch + one decode step for every
-        decoding lane; returns retired requests."""
-        if not any(s is not None for s in self.slots):
+        """One serving step: one storage batch (reads + one write batch)
+        + one decode step for every decoding lane; returns retired
+        requests."""
+        if (not any(s is not None for s in self.slots)
+                and not self.pending_writes()):
             return []
         self._step_storage()
         if not any(self._decoding):
@@ -180,10 +219,13 @@ class ServingEngine:
         return done
 
     def run(self, requests: list[Request]) -> list[Request]:
-        """Drive a queue through the continuous-batching loop."""
+        """Drive a queue through the continuous-batching loop; also
+        drains any queued online writes before returning, so accepted
+        admissions are never silently left uncommitted."""
         pending = list(requests)
         finished: list[Request] = []
-        while pending or any(s is not None for s in self.slots):
+        while (pending or any(s is not None for s in self.slots)
+                or self.pending_writes()):
             while pending and self.submit(pending[0]):
                 pending.pop(0)
             finished.extend(self.step())

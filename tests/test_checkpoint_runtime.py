@@ -126,3 +126,45 @@ def test_serving_engine_end_to_end(built_wiki):
         qmap = {q.qid: q for q in questions}
         acc = np.mean([score_answer(r.answer, qmap[r.rid]) for r in singles])
         assert acc >= 0.5
+
+
+def test_serving_interleaves_online_writes(built_wiki):
+    """ISSUE 2: the serving loop admits one write batch per decode step
+    through the planner (epoch-consistent), bounded by write_batch."""
+    from repro.core import records as R
+    from repro.core.engine import DeviceEngine
+    from repro.core.store import MemKV, PathStore
+
+    pipe, questions = built_wiki
+    # private store copy — built_wiki is session-scoped
+    store = PathStore(MemKV())
+    for p in pipe.store.all_paths():
+        store.put_record(p, pipe.store.get(p))
+    dev = DeviceEngine.from_store(store)
+    cfg = get_config("wikikv-router").reduced(d_model=32, vocab=512,
+                                              n_layers=2)
+    tok = HashTokenizer(vocab_size=cfg.vocab).fit(["x"])
+    params = M.init_params(cfg, seed=0)
+    engine = ServingEngine(cfg, params, tok, dev, HeuristicOracle(),
+                           batch_size=2, max_len=64, write_batch=4)
+    for i in range(10):
+        engine.submit_admit(f"/live/w{i}",
+                            R.FileRecord(name=f"w{i}", text=f"online {i}"))
+    engine.submit_unlink("/live/w0")
+    assert engine.pending_writes() == 11
+    steps = 0
+    while engine.pending_writes() and steps < 10:
+        engine.step()
+        steps += 1
+    # ≤ write_batch writes per step → at least ceil(11/4) = 3 steps
+    assert steps >= 3
+    # every write committed through the engine: visible post-refresh
+    assert store.get("/live/w5").text == "online 5"
+    assert dev.q1_get(["/live/w5"])[0].text == "online 5"
+    assert dev.q1_get(["/live/w0"]) == [None]
+    assert dev.epoch >= 3                    # one epoch per write wave
+    # writes also serve a subsequent query wave end-to-end
+    reqs = [Request(rid=q.qid, query=q.text, max_new_tokens=2)
+            for q in questions[:2]]
+    done = engine.run(reqs)
+    assert len(done) == 2 and all(r.done for r in done)

@@ -152,3 +152,58 @@ def test_cas_exhaustion_raises():
     store.get = flaky_get
     with pytest.raises(CASConflict):
         w.update_file("/d/e", lambda r: r, max_retries=3)
+
+
+def test_admission_publishes_whole_ancestor_chain():
+    """The bus must be a COMPLETE dirty-path log (the device mirror's
+    TensorDelta is materialized from it): admitting a deep path with no
+    existing parents publishes every auto-created ancestor level."""
+    store = PathStore(DictKV())
+    bus = InvalidationBus()
+    w = WikiWriter(store, bus=bus)
+    w.ensure_root()
+    seen: list[str] = []
+    bus.subscribe(lambda ev: seen.append(ev.path))
+    w.admit("/a/b/c", R.FileRecord(name="c", text="x"))
+    bus.drain()
+    # /a and /a/b were auto-created and root's child list changed
+    assert {"/a/b/c", "/a/b", "/a", "/"} <= set(seen)
+
+
+def test_writer_passthrough_primitives_publish():
+    store = PathStore(DictKV())
+    bus = InvalidationBus()
+    w = WikiWriter(store, bus=bus)
+    seen: list[str] = []
+    bus.subscribe(lambda ev: seen.append(ev.path))
+    w.put_record("/d", R.DirRecord(name="d"))
+    w.delete_record("/d")
+    assert w.get("/d") is None
+    bus.drain()
+    assert seen == ["/d", "/d"]
+
+
+def test_unlink_under_navigation_skip_on_miss():
+    """A reader that cached a directory listing across an unlink wave
+    still never returns an advertised-but-missing child (skip-on-miss),
+    and the bus carries both the parent and child invalidations."""
+    store, bus, w = _fresh()
+    reader = ConsistentReader(store)
+    for i in range(4):
+        w.admit(f"/d/e{i}", R.FileRecord(name=f"e{i}", text="x"))
+    bus.drain()
+    # interleave: unlink two children mid-"navigation"
+    out = store.ls("/d")          # raw listing captured before the unlink
+    assert out is not None
+    _, advertised = out
+    w.unlink("/d/e1")
+    w.unlink("/d/e3")
+    # the raw listing is stale, but the protocol reader drops ⊥ children
+    resolved = reader.ls("/d")[1]
+    got = {cp for cp, _ in resolved}
+    assert "/d/e1" not in got and "/d/e3" not in got
+    assert {"/d/e0", "/d/e2"} <= got
+    seen: list[str] = []
+    bus.subscribe(lambda ev: seen.append(ev.path))
+    bus.drain()
+    assert {"/d/e1", "/d/e3", "/d"} <= set(seen)

@@ -193,3 +193,345 @@ def test_batched_navigation_device_engine(built_wiki):
         qs, [UnitBudget(400) for _ in qs])
     assert _nav_outputs(solo) == _nav_outputs(many)
     assert dev.stats.total_calls() > 0
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 2: online write path — batched admissions, epoch-pinned reads,
+# incremental DeviceEngine refresh (Δ = 1 wave)
+# ---------------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.consistency import CASConflict, InvalidationBus  # noqa: E402
+from repro.core.engine import admit_wave, unlink_wave  # noqa: E402
+from repro.core.navigate import UnitBudget as _UB  # noqa: E402,F401
+
+
+def _seed_store(n_dims=2, n_leaves=3):
+    store = PathStore(MemKV())
+    w = WikiWriter(store, clock=lambda: 0.0)
+    w.ensure_root("root")
+    for d in range(n_dims):
+        w.admit(f"/d{d}", R.DirRecord(name=f"d{d}", summary=f"dim {d}"))
+        for e in range(n_leaves):
+            w.admit(f"/d{d}/e{e}", R.FileRecord(name=f"e{e}", text=f"{d}:{e}"))
+    return store
+
+
+def _engine_pair():
+    store = _seed_store()
+    host = HostEngine(PathStore(MemKV()))
+    # host over its own copy of the same logical state
+    for p in store.all_paths():
+        host.store.put_record(p, store.get(p))
+    dev = DeviceEngine.from_store(store)
+    return host, dev
+
+
+@pytest.mark.parametrize("make", ["host", "device"])
+def test_write_ops_are_batched_round_trips(make):
+    store = _seed_store()
+    eng = (HostEngine(store) if make == "host"
+           else DeviceEngine.from_store(store))
+    pl = BatchPlanner(eng)
+    futs = admit_wave(pl, [(f"/d0/new{i}", R.FileRecord(name=f"new{i}",
+                                                        text=str(i)))
+                           for i in range(8)])
+    futs += unlink_wave(pl, ["/d1/e0"])
+    pl.flush()
+    assert all(f.done for f in futs)
+    # ONE admit round trip for 8 admissions, one unlink round trip
+    assert eng.stats.calls["w_admit"] == 1
+    assert eng.stats.ops["w_admit"] == 8
+    assert eng.stats.served["w_admit"] == 8
+    assert eng.stats.calls["w_unlink"] == 1
+    eng.refresh()
+    assert eng.q1_get(["/d0/new3"])[0].text == "3"
+    assert eng.q1_get(["/d1/e0"]) == [None]
+
+
+def test_device_epoch_pinning_and_delta_refresh():
+    """A wave's reads execute against the epoch pinned at wave start —
+    same-wave writes are invisible; refresh() commits exactly one epoch
+    (Δ = 1 wave) via an incremental TensorDelta, no full re-freeze."""
+    store = _seed_store()
+    dev = DeviceEngine.from_store(store)
+    pl = BatchPlanner(dev)
+    pinned = dev.epoch
+    r_before = pl.get("/d0/w0")
+    pl.admit("/d0/w0", R.FileRecord(name="w0", text="wave-write"))
+    # read enqueued AFTER the write still sees the pinned epoch
+    r_after = pl.ls("/d0")
+    pl.flush()
+    assert r_before.value is None                       # not yet visible
+    assert "/d0/w0" not in (r_after.value[1] if r_after.value else [])
+    assert dev.epoch == pinned                          # mid-wave: unchanged
+    assert dev.refresh() == pinned + 1                  # Δ = 1 wave
+    assert dev.q1_get(["/d0/w0"])[0].text == "wave-write"
+    assert "/d0/w0" in dev.q2_ls(["/d0"])[0][1]
+    # the refresh was a delta, and it carried the child + its parent row
+    (delta,) = dev.delta_log
+    assert delta.epoch == pinned + 1
+    assert {"/d0/w0", "/d0"} <= {p for p, _ in delta.upserts}
+    # a clean refresh is a no-op
+    assert dev.refresh() == pinned + 1
+
+
+def test_incremental_refresh_matches_full_refreeze():
+    """After an arbitrary admit/update/unlink mix, the delta-refreshed
+    engine answers every Q1–Q4 batch identically to a fresh freeze."""
+    store = _seed_store()
+    dev = DeviceEngine.from_store(store)
+    pl = BatchPlanner(dev)
+    pl.admit("/d0/sub", R.DirRecord(name="sub"))
+    pl.admit("/d0/sub/leaf", R.FileRecord(name="leaf", text="deep"))
+    pl.admit("/d2/fresh_dim", R.FileRecord(name="fresh_dim", text="x"))
+    pl.update("/d0/e0", lambda r: R.FileRecord(name=r.name,
+                                               text="rewritten", meta=r.meta))
+    pl.unlink("/d1/e1")
+    pl.flush()
+    dev.refresh()
+    fresh = DeviceEngine.from_store(store)
+    paths = store.all_paths() + ["/d1/e1", "/nope"]
+    assert dev.q1_get(paths) == fresh.q1_get(paths)
+    assert dev.q2_ls(paths) == fresh.q2_ls(paths)
+    assert dev.q3_navigate(paths) == fresh.q3_navigate(paths)
+    assert dev.q4_search(["/", "/d0", "/d2"]) == fresh.q4_search(
+        ["/", "/d0", "/d2"])
+    assert dev.q4_contains(["leaf", "sub", "e1", "fresh"]) == fresh.q4_contains(
+        ["leaf", "sub", "e1", "fresh"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["admit", "unlink"]),
+                          st.integers(0, 1), st.integers(0, 5)),
+                min_size=1, max_size=12))
+def test_interleaved_write_read_waves_never_partial(wave_writes):
+    """Property (the acceptance invariant): interleaved admissions/unlinks
+    and navigation waves never observe a partial subtree — every read
+    wave sees EXACTLY the epoch it pinned, which equals the shadow model
+    of the store as of the previous refresh."""
+    store = _seed_store()
+    dev = DeviceEngine.from_store(store)
+    pl = BatchPlanner(dev)
+    # shadow model of the pinned epoch: logical path -> text/None
+    def snapshot():
+        return {p: store.get(p) for p in store.all_paths()}
+    pinned_model = snapshot()
+    for i, (kind, d, e) in enumerate(wave_writes):
+        path = f"/d{d}/p{e}"
+        # enqueue this wave's reads: full q1 sweep + every dir listing
+        probe = sorted(set(pinned_model) | {path})
+        f_get = [pl.get(p) for p in probe]
+        f_ls = [pl.ls(p) for p in probe]
+        # enqueue this wave's write
+        if kind == "admit":
+            pl.admit(path, R.FileRecord(name=f"p{e}", text=f"w{i}"))
+        else:
+            pl.unlink(path)
+        pl.flush()
+        # 1) exact-epoch reads: every get matches the pinned model
+        for p, f in zip(probe, f_get):
+            assert f.value == pinned_model.get(p)
+        # 2) no partial subtree: every advertised child resolves in the
+        #    same pinned epoch (skip-on-miss never needed on device)
+        for p, f in zip(probe, f_ls):
+            if f.value is None:
+                continue
+            _, children = f.value
+            for cp in children:
+                assert pinned_model.get(cp) is not None
+        new_epoch = dev.refresh()
+        assert new_epoch == dev.epoch
+        pinned_model = snapshot()       # Δ = 1 wave: next wave sees all
+    # convergence: final engine state == fresh freeze of the store
+    fresh = DeviceEngine.from_store(store)
+    paths = store.all_paths()
+    assert dev.q1_get(paths) == fresh.q1_get(paths)
+
+
+def test_partial_read_property_host_engine():
+    """Host side of the acceptance invariant: ls + child gets issued in
+    ONE wave never observe an advertised-but-missing child, even with
+    admissions and unlinks riding the same wave."""
+    store = _seed_store()
+    host = HostEngine(store)
+    pl = BatchPlanner(host)
+    for wave in range(6):
+        f_ls = pl.ls("/d0")
+        # child gets for everything advertised as of the last wave
+        known = host.q2_ls(["/d0"])[0][1]
+        f_get = [pl.get(c) for c in known]
+        pl.admit(f"/d0/w{wave}", R.FileRecord(name=f"w{wave}", text="x"))
+        if wave >= 2:
+            pl.unlink(f"/d0/w{wave - 2}")
+        pl.flush()
+        host.refresh()
+        rec, children = f_ls.value
+        got = dict(zip(known, [f.value for f in f_get]))
+        for cp in children:
+            if cp in got:               # advertised AND probed this wave
+                assert got[cp] is not None
+    assert host.epoch > 0
+
+
+def test_unlink_under_navigation_device(built_wiki):
+    """Navigation sessions keep returning consistent (pinned-epoch)
+    results while records are unlinked between waves; no session ever
+    reads a half-removed subtree."""
+    pipe, questions = built_wiki
+    # private copy — built_wiki is session-scoped
+    store = PathStore(MemKV())
+    for p in pipe.store.all_paths():
+        store.put_record(p, pipe.store.get(p))
+    dev = DeviceEngine.from_store(store)
+    nav = Navigator(dev, HeuristicOracle())
+    qs = [q.text for q in questions[:6]]
+    victims = [p for p in store.all_paths()
+               if P.depth(p) >= 2][:6]
+    for wave in range(3):
+        for v in victims[wave * 2:(wave + 1) * 2]:
+            nav.planner.unlink(v)
+        outs = nav.nav_many(qs, [UnitBudget(400) for _ in qs])
+        for results, trace in outs:
+            # every emitted result was readable in the pinned epoch
+            assert all(r.text is not None for r in results)
+        # session scheduler refreshed at wave end: unlinks are now visible
+        for v in victims[wave * 2:(wave + 1) * 2]:
+            assert dev.q1_get([v]) == [None]
+    fresh = DeviceEngine.from_store(store)
+    paths = store.all_paths()
+    assert dev.q1_get(paths) == fresh.q1_get(paths)
+
+
+def test_cas_conflict_and_retry_through_engine():
+    store = _seed_store()
+    host = HostEngine(store)
+    pl = BatchPlanner(host)
+
+    real_get = store.get
+    state = {"bumps": 1, "n": 0}
+
+    def transient_stale_get(path):
+        rec = real_get(path)
+        if path == "/d0/e0" and state["bumps"] > 0 and isinstance(
+                rec, R.FileRecord):
+            state["bumps"] -= 1
+            state["n"] += 1
+            from dataclasses import replace
+            # a version that moves on every read — the writer can never
+            # observe the same version twice, as under a racing writer
+            return replace(rec, meta=replace(rec.meta,
+                                             version=100 + state["n"]))
+        return rec
+
+    # one transient stale read: the engine's CAS loop retries and wins
+    store.get = transient_stale_get
+    fut = pl.update("/d0/e0", lambda r: R.FileRecord(name=r.name,
+                                                     text=r.text + "!",
+                                                     meta=r.meta))
+    pl.flush()
+    assert isinstance(fut.value, R.FileRecord) and fut.value.text.endswith("!")
+
+    # permanent conflict: resolves to the CASConflict, batch survives
+    state["bumps"] = 10 ** 9
+    f_bad = pl.update("/d0/e0", lambda r: r)
+    f_good = pl.update("/d1/e0", lambda r: R.FileRecord(name=r.name,
+                                                        text="fine",
+                                                        meta=r.meta))
+    pl.flush()
+    store.get = real_get
+    assert isinstance(f_bad.value, CASConflict)
+    assert isinstance(f_good.value, R.FileRecord) and f_good.value.text == "fine"
+
+
+def test_evolution_and_errorbook_flow_to_device():
+    """Out-of-band writers sharing the engine's bus (evolution pass,
+    errorbook repair) reach the tensor index at the next refresh."""
+    from repro.core.errorbook import ErrorBook, detect_errors, deterministic_repair
+    store = _seed_store()
+    dev = DeviceEngine.from_store(store)
+    w = dev.writer                      # the shared CAS/invalidation path
+    w.put_record("/d0/e0", R.FileRecord(
+        name="e0", text="see [[/missing/target]] here"))
+    dev.refresh()
+    assert "[[/missing/target]]" in dev.q1_get(["/d0/e0"])[0].text
+    book = ErrorBook()
+    report = detect_errors(store, book)
+    assert report.found.get("dangling_wikilink")
+    deterministic_repair(w, book, report)
+    dev.refresh()
+    assert "[[" not in dev.q1_get(["/d0/e0"])[0].text   # repair is visible
+    fresh = DeviceEngine.from_store(store)
+    paths = store.all_paths()
+    assert dev.q1_get(paths) == fresh.q1_get(paths)
+
+
+def test_cross_kind_write_order_preserved():
+    """unlink-then-readmit of one path in one wave must leave the new
+    record alive: the planner batches writes as same-kind RUNS in enqueue
+    order, never admissions-then-unlinks wholesale."""
+    store = _seed_store()
+    dev = DeviceEngine.from_store(store)
+    pl = BatchPlanner(dev)
+    f_u = pl.unlink("/d0/e0")
+    f_a = pl.admit("/d0/e0", R.FileRecord(name="e0", text="reborn"))
+    pl.flush()
+    dev.refresh()
+    assert f_u.value is True
+    assert f_a.done
+    assert store.get("/d0/e0").text == "reborn"
+    assert dev.q1_get(["/d0/e0"])[0].text == "reborn"
+    # and the engine saw two unlink-run/admit-run round trips, in order
+    assert dev.stats.calls["w_unlink"] == 1
+    assert dev.stats.calls["w_admit"] == 1
+
+
+def test_unlink_everything_root_survives():
+    """Unlinking the whole namespace in one wave: every non-root unlink
+    lands, the root unlink resolves to a PathError (no parent to unlink
+    from) instead of poisoning the batch, and the refreshed table still
+    holds the root — never an empty (unrepresentable) TensorWiki."""
+    store = _seed_store()
+    dev = DeviceEngine.from_store(store)
+    pl = BatchPlanner(dev)
+    futs = {p: pl.unlink(p) for p in store.all_paths()}
+    pl.flush()
+    dev.refresh()
+    assert isinstance(futs["/"].value, P.PathError)
+    assert all(v.value is True for p, v in futs.items() if p != "/")
+    assert dev.wiki.paths == ["/"]
+    assert store.all_paths() == ["/"]
+
+
+def test_apply_delta_refuses_to_empty_the_table():
+    from repro.core import tensorstore as TS
+    store = _seed_store()
+    wiki, recs = TS.freeze_with_records(store)
+    delta = TS.TensorDelta(epoch=1, unlinks=list(wiki.paths))
+    with pytest.raises(ValueError, match="empty table"):
+        TS.apply_delta(wiki, recs, delta)
+
+
+def test_per_item_write_failures_never_poison_the_wave():
+    """Invalid writes resolve their own futures to the exception; every
+    other write in the wave lands and every future resolves."""
+    store = _seed_store()
+    host = HostEngine(store)
+    pl = BatchPlanner(host)
+    f_deep = pl.admit("/a/b/c/d/e/f", R.FileRecord(name="f", text="x"))
+    f_ok = pl.admit("/d0/fine", R.FileRecord(name="fine", text="ok"))
+    f_upd_missing = pl.update("/d0/never_there", lambda r: r)
+    f_bad_unlink = pl.unlink("relative/path")
+    f_ok_unlink = pl.unlink("/d1/e0")
+    pl.flush()
+    host.refresh()
+    assert isinstance(f_deep.value, P.PathError)        # depth budget 5
+    assert isinstance(f_ok.value, R.FileRecord)
+    assert isinstance(f_upd_missing.value, KeyError)
+    assert isinstance(f_bad_unlink.value, P.PathError)
+    assert f_ok_unlink.value is True
+    assert store.get("/d0/fine").text == "ok"
+    assert store.get("/d1/e0") is None
+    # all futures resolved — nothing dangles
+    for f in (f_deep, f_ok, f_upd_missing, f_bad_unlink, f_ok_unlink):
+        assert f.done

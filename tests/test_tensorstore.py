@@ -74,3 +74,55 @@ def test_pinned_prefix_counts_dimensions(built_wiki):
     wiki = TS.freeze(pipe.store)
     n_dims = sum(1 for p in pipe.store.all_paths() if P.depth(p) <= 1)
     assert wiki.n_pinned == n_dims
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 2: TensorDelta incremental refresh ≡ full re-freeze (property)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.sets(st.builds(lambda a, b: f"/{a}/{b}", seg, seg),
+               min_size=2, max_size=16),
+       st.lists(st.tuples(st.sampled_from(["append", "overwrite", "unlink"]),
+                          seg, seg),
+                min_size=1, max_size=10))
+def test_apply_delta_matches_refreeze(paths, mutations):
+    norm = sorted({P.normalize(p) for p in paths})
+    dims = sorted({P.parent(p) for p in norm})
+    ps = _store_from_paths(dims + norm)
+    wiki, recs = TS.freeze_with_records(ps)
+    live = list(norm)
+    upserts, unlinks = [], []
+    for kind, a, b in mutations:
+        if kind == "append":
+            p = P.normalize(f"/{a}/x_{b}")
+            rec = R.FileRecord(name=P.basename(p), text="new")
+            ps.put_record(P.parent(p), R.DirRecord(name=P.basename(P.parent(p))))
+            ps.put_record(p, rec)
+            upserts.append((P.parent(p), ps.get(P.parent(p))))
+            upserts.append((p, rec))
+        elif kind == "overwrite" and live:
+            p = live[len(a) % len(live)]
+            rec = R.FileRecord(name=P.basename(p), text=f"over_{b}")
+            ps.put_record(p, rec)
+            upserts.append((p, rec))
+        elif kind == "unlink" and len(live) > 1:
+            p = live.pop(len(b) % len(live))
+            ps.delete_record(p)
+            unlinks.append(p)
+            upserts = [(q, r) for q, r in upserts if q != p]
+    delta = TS.TensorDelta(epoch=1, upserts=upserts, unlinks=unlinks)
+    got_wiki, got_recs = TS.apply_delta(wiki, recs, delta)
+    want_wiki, want_recs = TS.freeze_with_records(ps)
+    assert got_wiki.paths == want_wiki.paths
+    assert got_recs == want_recs
+    assert np.array_equal(np.asarray(got_wiki.keys_hi),
+                          np.asarray(want_wiki.keys_hi))
+    assert np.array_equal(np.asarray(got_wiki.keys_lo),
+                          np.asarray(want_wiki.keys_lo))
+    assert np.array_equal(np.asarray(got_wiki.child_offsets),
+                          np.asarray(want_wiki.child_offsets))
+    assert np.array_equal(np.asarray(got_wiki.child_rows),
+                          np.asarray(want_wiki.child_rows))
+    assert np.array_equal(np.asarray(got_wiki.lex_tokens),
+                          np.asarray(want_wiki.lex_tokens))
+    assert got_wiki.n_pinned == want_wiki.n_pinned
