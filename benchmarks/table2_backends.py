@@ -6,10 +6,11 @@ after a 200-query warmup, medians reported.  Backends: the WikiKV
 path-as-key layout on the MemKV LSM engine (our method, now served
 through the unified QueryEngine), its digest-range sharded variant
 (``wikikv_sharded``), the device engine over the frozen tensor index
-(``wikikv_device`` — Pallas Q1/Q4 on TPU, jnp reference elsewhere), FS,
-SQL (sqlite ≈ PostgreSQL+ltree) and a property-graph store (≈ Neo4j) —
-all in-process and memory-resident, so the comparison isolates the
-storage model exactly as §VI-B argues.
+(``wikikv_device`` — Pallas Q1/Q4 on TPU, jnp reference elsewhere), the
+durable WAL+SSTable tier (``wikikv_durable`` — reads served from real
+mmap'd segment files; honors ``REPRO_WAL_SYNC``), FS, SQL (sqlite ≈
+PostgreSQL+ltree) and a property-graph store (≈ Neo4j) — all in-process,
+so the comparison isolates the storage model exactly as §VI-B argues.
 
 The amortization section reports the engines' *batched* Q1/Q4 (one
 engine call for 256 lookups / a whole prefix batch) — the serving-tier

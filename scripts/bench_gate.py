@@ -25,6 +25,19 @@ GATED_METRICS = (
     "table2_wikikv_sharded_q1",
 )
 
+# Durable-tier rows (WAL + SSTable segments, REPRO_WAL_SYNC=none in CI):
+# recorded in the JSON artifact and printed, but NOT gated yet — one PR of
+# report-only soak to establish a container baseline, then move them into
+# GATED_METRICS.
+REPORT_ONLY_METRICS = (
+    "table2_wikikv_durable_q1",
+    "table2_wikikv_durable_q4",
+)
+
+# Informational budget from the ISSUE 3 acceptance: durable Q1 p50 should
+# stay within this factor of the in-memory wikikv backend with sync off.
+DURABLE_VS_MEM_BUDGET = 5.0
+
 
 def parse_rows(text: str) -> dict[str, float]:
     """Extract ``name -> value`` from the benchmark harness CSV output."""
@@ -64,6 +77,18 @@ def main() -> int:
         Path(args.json_out).parent.mkdir(parents=True, exist_ok=True)
         Path(args.json_out).write_text(json.dumps(rows, indent=2, sort_keys=True))
         print(f"bench gate: wrote {len(rows)} rows to {args.json_out}")
+
+    for metric in REPORT_ONLY_METRICS:
+        if metric in rows:
+            value = rows[metric]
+            print(f"bench gate: {metric}: current={value:.2f} (report-only, not gated this PR)")
+    durable = rows.get("table2_wikikv_durable_q1")
+    mem = rows.get("table2_wikikv_q1")
+    if durable and mem and mem > 0:
+        ratio = durable / mem
+        budget = DURABLE_VS_MEM_BUDGET
+        verdict = "OK" if ratio <= budget else "OVER BUDGET (informational)"
+        print(f"bench gate: durable/mem q1 ratio={ratio:.2f}x (budget {budget:.1f}x) {verdict}")
 
     gated = {m: rows[m] for m in GATED_METRICS if m in rows}
     if not gated:

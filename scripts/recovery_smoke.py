@@ -1,0 +1,106 @@
+"""Durable-tier recovery smoke for CI (ISSUE 3 satellite).
+
+Two phases in two processes:
+
+* child  (``--build DIR``): opens a sharded durable store, admits several
+  committed waves through the engine, prints the committed state as JSON,
+  then writes ONE more wave without committing it and exits via
+  ``os._exit`` — no ``close()``, no atexit, no buffered-tail flush.  The
+  SIGKILL-free analogue of a crash.
+* parent (default): runs the child, reopens the directory, and asserts
+  the record count and epoch match what the child committed — and that
+  the child's uncommitted wave is gone (Δ = 1 wave across restart).
+
+Run from the repo root: ``python scripts/recovery_smoke.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+SCRATCH = REPO / "artifacts" / f"durable_scratch_{os.getpid()}"
+UNCOMMITTED_PATH = "/d0/uncommitted_marker"
+
+
+def build(root: str) -> None:
+    from repro.core import records as R
+    from repro.core.engine import BatchPlanner, HostEngine
+    from repro.storage import open_durable_store
+
+    store = open_durable_store(root, n_shards=2)
+    host = HostEngine(store)
+    pl = BatchPlanner(host)
+    pl.admit("/d0", R.DirRecord(name="d0"))
+    for wave in range(4):
+        for i in range(3):
+            pl.admit(f"/d0/w{wave}_{i}",
+                     R.FileRecord(name=f"w{wave}_{i}", text=f"{wave}:{i}"))
+        pl.flush()
+        host.refresh()                       # wave boundary = WAL commit
+    committed = {"epoch": host.epoch, "paths": store.count()}
+    print(json.dumps(committed), flush=True)
+    # one more wave, executed but never committed — must not survive
+    pl.admit(UNCOMMITTED_PATH, R.FileRecord(name="m", text="lost"))
+    pl.flush()
+    assert store.get(UNCOMMITTED_PATH) is not None
+    os._exit(0)                              # crash: no close, no commit
+
+
+def main() -> int:
+    if len(sys.argv) == 3 and sys.argv[1] == "--build":
+        build(sys.argv[2])
+        return 0
+
+    root = str(SCRATCH / "store")
+    shutil.rmtree(SCRATCH, ignore_errors=True)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"src{os.pathsep}{env['PYTHONPATH']}" \
+        if env.get("PYTHONPATH") else "src"
+    env.setdefault("REPRO_WAL_SYNC", "none")
+    proc = subprocess.run(
+        [sys.executable, __file__, "--build", root],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+    if proc.returncode != 0:
+        print(proc.stdout)
+        print(proc.stderr, file=sys.stderr)
+        print("recovery smoke: child build FAILED", file=sys.stderr)
+        return 1
+    committed = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    os.environ.setdefault("REPRO_WAL_SYNC", "none")
+    from repro.core.engine import HostEngine
+    from repro.storage import open_durable_store
+
+    store = open_durable_store(root)
+    host = HostEngine(store)
+    ok = True
+    if host.epoch != committed["epoch"]:
+        print(f"recovery smoke: epoch {host.epoch} != committed "
+              f"{committed['epoch']}", file=sys.stderr)
+        ok = False
+    if store.count() != committed["paths"]:
+        print(f"recovery smoke: count {store.count()} != committed "
+              f"{committed['paths']}", file=sys.stderr)
+        ok = False
+    if store.get(UNCOMMITTED_PATH) is not None:
+        print("recovery smoke: uncommitted wave survived the crash",
+              file=sys.stderr)
+        ok = False
+    store.close()
+    shutil.rmtree(SCRATCH, ignore_errors=True)
+    if ok:
+        print(f"recovery smoke: OK — reopened {committed['paths']} records "
+              f"at epoch {committed['epoch']}; uncommitted wave dropped")
+        return 0
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,21 @@ cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# durable-tier fsync-off knob: container/CI timings are dominated by fsync
+# jitter otherwise; production default (unset) is fsync-per-wave
+export REPRO_WAL_SYNC="${REPRO_WAL_SYNC:-none}"
+
+# sweep durable-tier scratch on every exit path: the recovery-smoke
+# store dirs plus any stray *.wal/*.seg a crashed run left under
+# artifacts/.  Deliberately scoped to artifacts/ — a developer's own
+# durable store elsewhere in the tree must not have its WAL/segments
+# deleted out from under its manifest.
+cleanup() {
+  rm -rf artifacts/durable_scratch_*
+  find artifacts \( -name '*.wal' -o -name '*.seg' \) -type f -delete \
+    2>/dev/null || true
+}
+trap cleanup EXIT
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
@@ -20,3 +35,6 @@ echo "== bench gate (Q1 host-engine p50 regression) =="
 python scripts/bench_gate.py artifacts/BENCH_smoke.txt \
   --json-out artifacts/BENCH_smoke.json \
   --baseline benchmarks/baseline_smoke.json
+
+echo "== durable-tier recovery smoke (build → crash → reopen) =="
+python scripts/recovery_smoke.py

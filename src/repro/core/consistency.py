@@ -51,13 +51,21 @@ class InvalidationBus:
     making the staleness window Δ an explicit, testable quantity instead
     of a thread-timing accident.  ``subscribe`` callbacks receive each
     event exactly once, in publish order.
+
+    ``journal`` (optional) is the durable-tier hook: every publish is
+    also appended to the write-ahead log (``storage.DurableKV
+    .journal_invalidation``), making the bus a *crash-safe* complete
+    dirty-path log — after a restart the device tier rehydrates its
+    pending ``TensorDelta`` work list from the journaled, committed
+    publishes (see docs/STORAGE.md).
     """
 
-    def __init__(self):
+    def __init__(self, journal: Callable[[str], None] | None = None):
         self._subs: list[Callable[[Invalidation], None]] = []
         self._queue: list[Invalidation] = []
         self._seq = 0
         self._lock = threading.Lock()
+        self.journal = journal
 
     def subscribe(self, fn: Callable[[Invalidation], None]) -> None:
         self._subs.append(fn)
@@ -67,6 +75,8 @@ class InvalidationBus:
             self._seq += 1
             ev = Invalidation(path=path, seq=self._seq)
             self._queue.append(ev)
+        if self.journal is not None:
+            self.journal(path)
         return ev
 
     def drain(self) -> int:
@@ -80,6 +90,20 @@ class InvalidationBus:
 
     def pending(self) -> int:
         return len(self._queue)
+
+
+def attach_journal(bus: InvalidationBus | None, store) -> bool:
+    """Wire a bus's publishes into a durable store's WAL (no-op for
+    volatile stores or when a journal is already attached).  Returns
+    whether the bus now journals."""
+    if bus is None:
+        return False
+    if bus.journal is not None:
+        return True
+    if getattr(store, "durable", False):
+        bus.journal = store.journal_invalidation
+        return True
+    return False
 
 
 class CASConflict(RuntimeError):

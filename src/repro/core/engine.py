@@ -52,7 +52,8 @@ import numpy as np
 
 from . import paths as P
 from . import records as R
-from .consistency import CASConflict, InvalidationBus, WikiWriter
+from .consistency import (CASConflict, InvalidationBus, WikiWriter,
+                          attach_journal)
 from .store import KVEngine, MemKV, PathStore, _segment_tokens
 
 # operator names used for stats keys
@@ -240,6 +241,32 @@ class QueryEngine:
         if n > 0:
             self._pending_writes += n
 
+    def _backing_store(self):
+        store = getattr(self, "store", None)
+        if store is None and self.writer is not None:
+            store = self.writer.store
+        return store
+
+    def _restore_epoch(self) -> None:
+        """Rehydrate the epoch counter from a durable store's last WAL
+        commit (0 on volatile stores) — called at construction so an
+        engine reopened over an existing directory resumes the committed
+        epoch sequence instead of restarting at 0."""
+        store = self._backing_store()
+        last = getattr(store, "last_epoch", None)
+        if last is not None:
+            self.epoch = last()
+
+    def _commit_durable(self) -> None:
+        """Group-commit the wave at the (just bumped) epoch: one WAL
+        flush per planner wave on a durable store, so WAL batch
+        boundaries align with epoch boundaries.  No-op on volatile
+        stores."""
+        store = self._backing_store()
+        commit = getattr(store, "commit_epoch", None)
+        if commit is not None:
+            commit(self.epoch)
+
     def refresh(self) -> int:
         """Commit admitted writes to the read view and return the new
         epoch.  Called by wave drivers between waves; a no-op (same
@@ -247,6 +274,7 @@ class QueryEngine:
         if self._pending_writes:
             self._pending_writes = 0
             self.epoch += 1
+            self._commit_durable()
         return self.epoch
 
 
@@ -265,15 +293,26 @@ class ShardedPathStore:
 
     Duck-types the ``PathStore`` surface used by the writer, cache,
     tensorstore freeze and engines.
+
+    ``engine_factory`` (shard index → ``KVEngine``) is how the durable
+    tier plugs in: ``storage.durable_engine_factory(root)`` gives every
+    digest-range shard its own WAL + segment directory, so group commit,
+    spill and compaction stay per-shard on disk exactly as the memtables
+    are in memory.
     """
 
     def __init__(self, n_shards: int = 4,
                  engines: Sequence[KVEngine] | None = None,
                  depth_budget: int | None = P.DEFAULT_DEPTH_BUDGET,
-                 memtable_limit: int = 4096):
+                 memtable_limit: int = 4096,
+                 engine_factory: Callable[[int], KVEngine] | None = None):
         if engines is not None:
             self.shards = [PathStore(e, depth_budget=depth_budget)
                            for e in engines]
+        elif engine_factory is not None:
+            self.shards = [PathStore(engine_factory(i),
+                                     depth_budget=depth_budget)
+                           for i in range(max(1, n_shards))]
         else:
             self.shards = [PathStore(MemKV(memtable_limit=memtable_limit),
                                      depth_budget=depth_budget)
@@ -350,13 +389,11 @@ class ShardedPathStore:
 
     def flush(self) -> None:
         for s in self.shards:
-            s.engine.flush()
+            s.flush()
 
     def compact(self) -> None:
         for s in self.shards:
-            eng = s.engine
-            if hasattr(eng, "compact"):
-                eng.compact()
+            s.compact()
 
     def op_counts(self) -> dict[str, int]:
         total: dict[str, int] = {}
@@ -364,6 +401,38 @@ class ShardedPathStore:
             for k, v in s.engine.op_counts().items():
                 total[k] = total.get(k, 0) + v
         return total
+
+    # -- durable-tier fan-out (see PathStore for the single-shard forms) ----
+    @property
+    def durable(self) -> bool:
+        return any(s.durable for s in self.shards)
+
+    def close(self) -> None:
+        for s in self.shards:
+            s.close()
+
+    def commit_epoch(self, epoch: int) -> None:
+        for s in self.shards:
+            s.commit_epoch(epoch)
+
+    def last_epoch(self) -> int:
+        return max((s.last_epoch() for s in self.shards), default=0)
+
+    def journal_invalidation(self, path: str) -> None:
+        """Journal into the owning shard's WAL — the publish is recovered
+        by the shard that also holds the record bytes."""
+        shard, p = self._route(path)
+        shard.journal_invalidation(p)
+
+    def mark_device_epoch(self, epoch: int) -> None:
+        for s in self.shards:
+            s.mark_device_epoch(epoch)
+
+    def pending_invalidations(self) -> list[str]:
+        out: list[str] = []
+        for s in self.shards:
+            out.extend(s.pending_invalidations())
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -384,6 +453,11 @@ class HostEngine(QueryEngine):
         super().__init__()
         self.store = store
         self.writer = writer if writer is not None else WikiWriter(store, bus=bus)
+        # NOTE: no attach_journal here — the WAL invalidation journal
+        # exists solely for device-tier rehydration, and only a
+        # DeviceEngine (whose refresh DEVMARKs clear it) may attach it;
+        # a host-only attach would grow the pending list forever
+        self._restore_epoch()
 
     def refresh(self) -> int:
         if self.writer.bus is not None:
@@ -454,6 +528,9 @@ class DeviceEngine(QueryEngine):
         self.store = store
         self.delta_log: list = []
         self._dirty: set[str] = set()
+        #: dirty paths rehydrated from the durable tier's committed
+        #: invalidation journal at construction (diagnostics/tests)
+        self.rehydrated_paths: list[str] = []
         if store is not None:
             if writer is not None:
                 self.writer = writer
@@ -463,6 +540,8 @@ class DeviceEngine(QueryEngine):
                 self.writer = WikiWriter(
                     store, bus=bus if bus is not None else InvalidationBus())
             self.writer.bus.subscribe(self._note_dirty)
+            attach_journal(self.writer.bus, store)
+            self._restore_epoch()
         self._install(wiki, records)
 
     def _note_dirty(self, ev) -> None:
@@ -517,8 +596,20 @@ class DeviceEngine(QueryEngine):
         ``refresh()`` deltas, never another full freeze."""
         from . import tensorstore as TS
         wiki, recs = TS.freeze_with_records(store)
-        return cls(wiki, recs, depth_budget=store.depth_budget,
-                   store=store, writer=writer, bus=bus)
+        eng = cls(wiki, recs, depth_budget=store.depth_budget,
+                  store=store, writer=writer, bus=bus)
+        # Epoch-consistent rehydration over a durable store: the freeze
+        # just read the *current* store, which already includes every
+        # committed-but-unapplied dirty path in the WAL journal — record
+        # them (the TensorDelta work list a snapshot-based reopen would
+        # replay) and mark the journal applied through the restored epoch.
+        pending = getattr(store, "pending_invalidations", None)
+        if pending is not None:
+            eng.rehydrated_paths = pending()
+            mark = getattr(store, "mark_device_epoch", None)
+            if mark is not None and getattr(store, "durable", False):
+                mark(eng.epoch)
+        return eng
 
     # ------------------------------------------------------------------
     def refresh(self) -> int:
@@ -546,8 +637,13 @@ class DeviceEngine(QueryEngine):
             elif p in resident:
                 unlinks.append(p)
         self._dirty.clear()
+        had_writes = self._pending_writes > 0
         self._pending_writes = 0
         if not upserts and not unlinks:
+            # no visible tensor change, but the wave's WAL records (e.g.
+            # an admit+unlink that cancelled out) still need their commit
+            if had_writes:
+                self._commit_durable()
             return self.epoch
         delta = TS.TensorDelta(epoch=self.epoch + 1,
                                upserts=upserts, unlinks=unlinks)
@@ -557,6 +653,12 @@ class DeviceEngine(QueryEngine):
         del self.delta_log[:-self.DELTA_LOG_KEEP]
         self.epoch += 1
         self.stats.record(REFRESH, len(delta))
+        # durable wave boundary: DEVMARK (journal applied through this
+        # epoch) rides the same WAL commit as the wave it closes
+        mark = getattr(self.store, "mark_device_epoch", None)
+        if mark is not None and getattr(self.store, "durable", False):
+            mark(self.epoch)
+        self._commit_durable()
         return self.epoch
 
     # ------------------------------------------------------------------

@@ -150,10 +150,10 @@ class ConstructionPipeline:
             self.stats.evolution_ops += sum(1 for o in ops if o.committed)
             self._since_evolution = 0
         # LSM hygiene between offline batches: flush + compact so the
-        # online read path sees one sorted run
-        self.store.engine.flush()
-        if hasattr(self.store.engine, "compact"):
-            self.store.engine.compact()
+        # online read path sees one sorted run (store-level so the durable
+        # and sharded facades fan out per engine/shard)
+        self.store.flush()
+        self.store.compact()
         return self.stats
 
     def _update_entity(self, epath: str, ent: str, doc: dict,

@@ -98,10 +98,14 @@ class MemKV(KVEngine):
 
     def get(self, key: bytes) -> Optional[bytes]:
         self._count("get")
-        v = self._mem.get(key)
+        # snapshot under the lock: a concurrent put may _freeze() the
+        # memtable mid-read (swap self._mem, append to self._runs)
+        with self._lock:
+            v = self._mem.get(key)
+            runs = list(self._runs)
         if v is not None:
             return None if v is _TOMBSTONE else v  # type: ignore[return-value]
-        for ks, vs in reversed(self._runs):
+        for ks, vs in reversed(runs):
             i = bisect.bisect_left(ks, key)
             if i < len(ks) and ks[i] == key:
                 v = vs[i]
@@ -110,17 +114,23 @@ class MemKV(KVEngine):
 
     def scan(self, prefix: bytes) -> Iterator[tuple[bytes, bytes]]:
         self._count("scan")
-        # merge memtable + runs; newest wins
+        # snapshot the memtable + run list under the lock before merging:
+        # iterating self._mem.items() unlocked races a put that triggers
+        # _freeze() ("dict changed size during iteration")
+        with self._lock:
+            mem_items = [(k, v) for k, v in self._mem.items()
+                         if k.startswith(prefix)]
+            runs = list(self._runs)
+        # merge runs + memtable snapshot; newest wins
         merged: dict[bytes, object] = {}
-        for ks, vs in self._runs:
+        for ks, vs in runs:
             lo = bisect.bisect_left(ks, prefix)
             for i in range(lo, len(ks)):
                 if not ks[i].startswith(prefix):
                     break
                 merged[ks[i]] = vs[i]
-        for k, v in self._mem.items():
-            if k.startswith(prefix):
-                merged[k] = v
+        for k, v in mem_items:
+            merged[k] = v
         for k in sorted(merged):
             v = merged[k]
             if v is not _TOMBSTONE:
@@ -294,3 +304,46 @@ class PathStore:
 
     def count(self) -> int:
         return sum(1 for _ in self.engine.scan(_CF_PATH))
+
+    # -- engine maintenance / durable-tier passthroughs ---------------------
+    # Duck-typed delegation so the facade works unchanged over MemKV,
+    # DictKV, or storage.DurableKV; callers probe the same names on
+    # ShardedPathStore, which fans them out per shard.
+    @property
+    def durable(self) -> bool:
+        return hasattr(self.engine, "journal_invalidation")
+
+    def flush(self) -> None:
+        self.engine.flush()
+
+    def compact(self) -> None:
+        if hasattr(self.engine, "compact"):
+            self.engine.compact()
+
+    def close(self) -> None:
+        if hasattr(self.engine, "close"):
+            self.engine.close()
+
+    def commit_epoch(self, epoch: int) -> None:
+        """Group-commit the engine's buffered wave at ``epoch`` (WAL
+        COMMIT marker on a durable engine; no-op on volatile ones)."""
+        if hasattr(self.engine, "commit_epoch"):
+            self.engine.commit_epoch(epoch)
+
+    def last_epoch(self) -> int:
+        if hasattr(self.engine, "last_epoch"):
+            return self.engine.last_epoch()
+        return 0
+
+    def journal_invalidation(self, path: str) -> None:
+        if hasattr(self.engine, "journal_invalidation"):
+            self.engine.journal_invalidation(path)
+
+    def mark_device_epoch(self, epoch: int) -> None:
+        if hasattr(self.engine, "mark_device_epoch"):
+            self.engine.mark_device_epoch(epoch)
+
+    def pending_invalidations(self) -> list[str]:
+        if hasattr(self.engine, "pending_invalidations"):
+            return self.engine.pending_invalidations()
+        return []

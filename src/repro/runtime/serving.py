@@ -218,6 +218,40 @@ class ServingEngine:
                 self._decoding[i] = False
         return done
 
+    # ------------------------------------------------------------------
+    # durable snapshot / reopen (ISSUE 3)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Quiesce the write path and commit the durable tier: drain the
+        queued write batches through planner waves, refresh (commits the
+        epoch), then flush the store so every committed record is in the
+        WAL/segments.  After this returns, the store directory can be
+        reopened — ``ServingEngine.reopen_store`` — with zero
+        re-ingestion and the same epoch.  On a volatile store this is
+        just a planner drain (flush/commit no-op)."""
+        while self.pending_writes():
+            self._enqueue_write_batch()
+            self.planner.flush()
+            self.engine.refresh()
+        self.planner.flush()
+        self.engine.refresh()
+        store = getattr(self.engine, "store", None)
+        if store is not None and hasattr(store, "flush"):
+            store.flush()
+        return {"epoch": self.engine.epoch,
+                "paths": store.count() if store is not None else 0}
+
+    @staticmethod
+    def reopen_store(root: str, n_shards: int | None = None, **kw):
+        """Reopen a durable store directory written by a previous
+        process (crash recovery included): recovers manifest + segments,
+        replays the WAL's committed waves, and returns a
+        ``PathStore``/``ShardedPathStore`` ready to hand to
+        ``ServingEngine`` (the engine then restores the committed
+        epoch)."""
+        from ..storage import open_durable_store
+        return open_durable_store(root, n_shards=n_shards, **kw)
+
     def run(self, requests: list[Request]) -> list[Request]:
         """Drive a queue through the continuous-batching loop; also
         drains any queued online writes before returning, so accepted

@@ -1,0 +1,10 @@
+"""Durable storage tier (ISSUE 3): WAL + SSTable segments + manifest
+behind the ``KVEngine`` protocol, with crash recovery and the epoch /
+invalidation journal the device tier rehydrates from.  See
+docs/STORAGE.md for the on-disk layout and recovery protocol."""
+from .lsm import DurableKV, durable_engine_factory, open_durable_store
+from .sstable import SSTable, write_sstable
+from .wal import WAL, replay
+
+__all__ = ["DurableKV", "durable_engine_factory", "open_durable_store",
+           "SSTable", "write_sstable", "WAL", "replay"]

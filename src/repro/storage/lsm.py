@@ -1,0 +1,370 @@
+"""``DurableKV`` — the disk-backed LSM engine behind the ``KVEngine``
+protocol (ISSUE 3 tentpole).
+
+Write path: every put/delete appends a WAL record (buffered) and lands in
+the dict memtable.  ``commit_epoch(e)`` — called once per planner wave by
+``QueryEngine.refresh()``, or via ``flush()`` between offline batches —
+group-commits the buffered wave to the WAL; when the memtable exceeds its
+limit the commit also *spills* it to a sorted segment file and swaps the
+manifest, after which the WAL is truncated (everything it held is now in
+a segment).
+
+Read path: memtable first, then segments newest-first (tombstone-aware),
+exactly MemKV's shape with the frozen runs on disk.
+
+Crash recovery (``recover()``, run at construction): load the manifest,
+sweep orphan segments, open the live segments, replay the WAL's committed
+waves over them, truncate any uncommitted/corrupt tail.  Guarantees:
+
+* a crash loses at most the wave that had not yet committed (Δ = 1 wave
+  across restart — the engine-layer tests assert this end to end);
+* a torn WAL tail is detected by CRC and cleanly dropped;
+* a crash between segment write and manifest swap leaves an orphan file
+  that recovery deletes — the WAL still holds those records, so nothing
+  is lost and nothing is duplicated (WAL replay over segments is
+  idempotent: upserts and tombstones, not increments).
+
+Epoch rehydration: COMMIT records carry the write epoch and DEVMARK
+records the epoch the device tier last applied; INV records journal
+every invalidation-bus publish.  After restart, ``last_epoch()`` restores
+the engine epoch and ``pending_invalidations()`` returns the committed
+dirty paths the device tier had NOT yet applied — the exact
+``TensorDelta`` work list for its first post-restart ``refresh()``.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Callable, Iterator, Optional
+
+from ..core import paths as P
+from ..core.store import KVEngine, PathStore
+from . import manifest as MF
+from . import wal as W
+from .sstable import MISSING, TOMBSTONE, SSTable, write_sstable
+
+WAL_NAME = "wikikv.wal"
+
+
+class DurableKV(KVEngine):
+    """Durable memtable → WAL → SSTable engine; one directory per engine
+    (per digest-range shard when used under ``ShardedPathStore``)."""
+
+    def __init__(self, dirname: str, memtable_limit: int = 4096,
+                 sync: str | None = None, auto_compact_segments: int = 8):
+        self.dirname = dirname
+        self._limit = memtable_limit
+        self._auto = auto_compact_segments
+        self._sync = W.sync_mode(sync)
+        self._lock = threading.RLock()
+        self._mem: dict[bytes, object] = {}
+        self._segments: list[SSTable] = []     # oldest first; newest wins
+        self._inval_buf: list[str] = []        # journaled, not yet committed
+        self._closed = False
+        os.makedirs(dirname, exist_ok=True)
+        self._recover()
+        wal_path = os.path.join(dirname, WAL_NAME)
+        wal_existed = os.path.exists(wal_path)
+        self._wal = W.WAL(wal_path, sync=self._sync)
+        if self._sync == "fsync" and not wal_existed:
+            # a freshly created WAL's directory entry must be durable
+            # before any commit claims its contents are
+            W.fsync_dir(dirname)
+
+    # ------------------------------------------------------------------
+    # recovery
+    # ------------------------------------------------------------------
+    def _recover(self) -> None:
+        m = MF.load(self.dirname)
+        MF.sweep_orphans(self.dirname, m)
+        self._manifest = m
+        self._segments = [SSTable(os.path.join(self.dirname, name))
+                          for name in m.segments]
+        self._epoch = m.epoch
+        self._device_epoch = m.device_epoch
+        self._pending_inval: list[str] = list(m.pending_inval)
+        wal_path = os.path.join(self.dirname, WAL_NAME)
+        res = W.replay(wal_path)
+        for wave in res.waves:
+            for rec in wave:
+                if rec.kind == W.PUT:
+                    self._mem[rec.key] = rec.value
+                elif rec.kind == W.DEL:
+                    self._mem[rec.key] = TOMBSTONE
+                elif rec.kind == W.INV:
+                    self._pending_inval.append(rec.path)
+                elif rec.kind == W.DEVMARK:
+                    self._device_epoch = max(self._device_epoch, rec.epoch)
+                    self._pending_inval.clear()
+                elif rec.kind == W.COMMIT:
+                    self._epoch = max(self._epoch, rec.epoch)
+        self.recovery_dropped = res.dropped_records
+        self.recovery_corrupt_tail = res.corrupt_tail
+        if res.dropped_records or res.corrupt_tail:
+            # drop the uncommitted wave / torn tail so the next append
+            # starts at a clean frame boundary
+            with open(wal_path, "rb+") as f:
+                f.truncate(res.valid_end)
+
+    # ------------------------------------------------------------------
+    # KVEngine surface
+    # ------------------------------------------------------------------
+    def put(self, key: bytes, value: bytes) -> None:
+        self._count("put")
+        with self._lock:
+            self._wal.append_put(key, value)
+            self._mem[key] = value
+
+    def delete(self, key: bytes) -> None:
+        self._count("delete")
+        with self._lock:
+            self._wal.append_delete(key)
+            self._mem[key] = TOMBSTONE
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        self._count("get")
+        with self._lock:
+            v = self._mem.get(key)
+            if v is not None:
+                return None if v is TOMBSTONE else v  # type: ignore[return-value]
+            for seg in reversed(self._segments):
+                v = seg.get(key)
+                if v is TOMBSTONE:
+                    return None
+                if v is not MISSING:
+                    return v  # type: ignore[return-value]
+        return None
+
+    def scan(self, prefix: bytes) -> Iterator[tuple[bytes, bytes]]:
+        self._count("scan")
+        with self._lock:
+            merged: dict[bytes, object] = {}
+            for seg in self._segments:          # oldest → newest
+                for k, v in seg.scan(prefix):
+                    merged[k] = v
+            for k, v in self._mem.items():
+                if k.startswith(prefix):
+                    merged[k] = v
+        for k in sorted(merged):
+            v = merged[k]
+            if v is not TOMBSTONE:
+                yield k, v  # type: ignore[misc]
+
+    def flush(self) -> None:
+        """KVEngine hygiene hook (offline pipeline batches): commit the
+        buffered wave at the current epoch — durability without an epoch
+        bump."""
+        self.commit_epoch(self._epoch)
+
+    # ------------------------------------------------------------------
+    # group commit + spill (the wave boundary)
+    # ------------------------------------------------------------------
+    def commit_epoch(self, epoch: int) -> None:
+        with self._lock:
+            # monotone: a lagging engine sharing this store (e.g. a
+            # device mirror whose own counter trails the host's) must
+            # never move the committed epoch backwards
+            epoch = max(epoch, self._epoch)
+            if (epoch == self._epoch and self._wal.pending_bytes() == 0
+                    and not self._inval_buf and len(self._mem) < self._limit):
+                # same epoch, nothing to make durable: skip the COMMIT
+                # frame and its fsync, so repeated flush() calls never
+                # grow the WAL with redundant empty waves.  An epoch
+                # ADVANCE is always recorded, even content-free — the
+                # committed epoch sequence must survive restart.
+                return
+            self._wal.commit(epoch)
+            self._epoch = epoch
+            self._manifest.epoch = epoch
+            self._pending_inval.extend(self._inval_buf)
+            self._inval_buf.clear()
+            if len(self._mem) >= self._limit:
+                self._spill_locked()
+                if len(self._segments) >= self._auto:
+                    self._compact_locked()
+
+    def _spill_locked(self) -> None:
+        """Freeze the (fully committed) memtable into a new segment and
+        make it live: segment write + fsync → manifest swap → WAL reset.
+        Each arrow is a crash boundary recovery handles (orphan sweep /
+        idempotent WAL replay)."""
+        if not self._mem:
+            return
+        name = self._manifest.alloc_segment()
+        path = os.path.join(self.dirname, name)
+        write_sstable(path, sorted(self._mem.items()),
+                      sync=self._sync == "fsync")
+        self._manifest.segments.append(name)
+        # the manifest must carry the LIVE counters, not whatever it held
+        # on disk: after a reopen the committed epoch may exist only in
+        # WAL COMMIT records, and the reset below truncates those
+        self._manifest.epoch = self._epoch
+        self._manifest.device_epoch = self._device_epoch
+        self._manifest.pending_inval = list(self._pending_inval)
+        MF.store(self.dirname, self._manifest, sync=self._sync == "fsync")
+        self._segments.append(SSTable(path))
+        self._mem = {}
+        self._wal.reset()
+
+    def compact(self) -> None:
+        with self._lock:
+            # segments may only ever hold committed records (recovery
+            # trusts them unconditionally) — close the open wave first
+            if self._wal.pending_bytes() or self._inval_buf:
+                self.commit_epoch(self._epoch)
+            self._spill_locked()
+            self._compact_locked()
+
+    def _compact_locked(self) -> None:
+        """Full merge of all segments into one; tombstones drop (the merge
+        covers the whole keyspace).  Crash-safe: the merged segment only
+        becomes live at the manifest swap, and the old files are deleted
+        only after it."""
+        if not self._segments:
+            return
+        merged: dict[bytes, object] = {}
+        for seg in self._segments:
+            for k, v in seg.iter_all():
+                merged[k] = v
+        items = sorted((k, v) for k, v in merged.items() if v is not TOMBSTONE)
+        old = list(self._manifest.segments)
+        if items:
+            name = self._manifest.alloc_segment()
+            write_sstable(os.path.join(self.dirname, name), items,
+                          sync=self._sync == "fsync")
+            self._manifest.segments = [name]
+        else:
+            self._manifest.segments = []
+        self._manifest.epoch = self._epoch
+        self._manifest.device_epoch = self._device_epoch
+        self._manifest.pending_inval = list(self._pending_inval)
+        MF.store(self.dirname, self._manifest, sync=self._sync == "fsync")
+        for seg in self._segments:
+            seg.close()
+        for stale in old:
+            try:
+                os.remove(os.path.join(self.dirname, stale))
+            except FileNotFoundError:
+                pass
+        self._segments = [SSTable(os.path.join(self.dirname, n))
+                          for n in self._manifest.segments]
+
+    # ------------------------------------------------------------------
+    # epoch / invalidation journal (device rehydration contract)
+    # ------------------------------------------------------------------
+    def journal_invalidation(self, path: str) -> None:
+        with self._lock:
+            self._wal.append_inval(path)
+            self._inval_buf.append(path)
+
+    def mark_device_epoch(self, epoch: int) -> None:
+        """The device tier has applied every dirty path through ``epoch``
+        (called inside ``DeviceEngine.refresh`` just before the commit, so
+        DEVMARK lands in the same WAL wave as its COMMIT).  Clearing the
+        pending list is the real effect; the recorded epoch is kept
+        monotone like the commit epoch."""
+        with self._lock:
+            epoch = max(epoch, self._device_epoch)
+            self._wal.append_devmark(epoch)
+            self._device_epoch = epoch
+            self._pending_inval.clear()
+            self._inval_buf.clear()
+
+    def last_epoch(self) -> int:
+        return self._epoch
+
+    def device_epoch(self) -> int:
+        return self._device_epoch
+
+    def pending_invalidations(self) -> list[str]:
+        """Committed dirty paths the device tier has not applied — the
+        rehydration work list (order preserved, duplicates kept: the
+        dirty-set consumer dedups)."""
+        return list(self._pending_inval)
+
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        """Clean shutdown: commit any buffered tail so a reopen is
+        byte-identical, then release file handles."""
+        if self._closed:
+            return
+        with self._lock:
+            if self._wal.pending_bytes() or self._inval_buf:
+                self.commit_epoch(self._epoch)
+            self._wal.close()
+            for seg in self._segments:
+                seg.close()
+            self._closed = True
+
+
+# ---------------------------------------------------------------------------
+# store-level helpers
+# ---------------------------------------------------------------------------
+def durable_engine_factory(root: str, memtable_limit: int = 4096,
+                           sync: str | None = None
+                           ) -> Callable[[int], DurableKV]:
+    """Engine factory for ``ShardedPathStore``: shard *i* gets its own
+    WAL + segment directory ``<root>/shard_<i>`` — per-shard group commit
+    and compaction, the per-shard isolation of the in-memory tier kept on
+    disk."""
+    def make(i: int) -> DurableKV:
+        return DurableKV(os.path.join(root, f"shard_{i:02d}"),
+                         memtable_limit=memtable_limit, sync=sync)
+    return make
+
+
+STORE_META = "STORE.json"
+
+
+def open_durable_store(root: str, n_shards: int | None = None,
+                       depth_budget: int | None = P.DEFAULT_DEPTH_BUDGET,
+                       memtable_limit: int = 4096, sync: str | None = None):
+    """Open (or create) a durable path store rooted at ``root``.
+
+    ``n_shards == 1`` → a ``PathStore`` over one ``DurableKV``;
+    otherwise a digest-range ``ShardedPathStore`` with one WAL+segment
+    directory per shard.  Reopening an existing root recovers from disk
+    — zero re-ingestion.
+
+    The shard count is persisted in ``STORE.json`` at creation and
+    enforced on reopen: digest-range routing depends on S, so reopening
+    with a different count would silently send every lookup to the wrong
+    shard.  Pass ``n_shards=None`` to reopen with whatever the store was
+    created with."""
+    import json
+    from ..core.engine import ShardedPathStore
+    do_sync = W.sync_mode(sync) == "fsync"
+    os.makedirs(root, exist_ok=True)
+    meta_path = os.path.join(root, STORE_META)
+    if os.path.exists(meta_path):
+        with open(meta_path, "r", encoding="utf-8") as f:
+            persisted = int(json.load(f)["n_shards"])
+        if n_shards is not None and n_shards != persisted:
+            raise ValueError(
+                f"store at {root!r} was created with n_shards={persisted}, "
+                f"cannot reopen with n_shards={n_shards} (digest-range "
+                "routing would change)")
+        n_shards = persisted
+    else:
+        n_shards = 1 if n_shards is None else max(1, n_shards)
+        tmp = meta_path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump({"n_shards": n_shards}, f)
+            if do_sync:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(tmp, meta_path)
+        if do_sync:
+            # the shard-count guard is itself part of the durability
+            # story: without it a power loss could leave shard data with
+            # no STORE.json, letting a wrong-S reopen misroute digests
+            W.fsync_dir(root)
+    if n_shards <= 1:
+        return PathStore(DurableKV(root, memtable_limit=memtable_limit,
+                                   sync=sync),
+                         depth_budget=depth_budget)
+    return ShardedPathStore(
+        n_shards=n_shards,
+        engine_factory=durable_engine_factory(
+            root, memtable_limit=memtable_limit, sync=sync),
+        depth_budget=depth_budget)

@@ -1,0 +1,94 @@
+"""Segment registry: the single source of truth for which segment files
+are live, written atomically (write-new-then-rename — the same pattern as
+``checkpoint/manager.py``'s step commit).
+
+The manifest carries everything recovery needs besides the WAL itself:
+
+* ``segments``      — live segment file names, oldest → newest (newer
+                      segments shadow older on reads)
+* ``next_seg``      — monotone id allocator (never reused, so a crashed
+                      spill's orphan file can never collide with a live one)
+* ``epoch``         — last committed write epoch at manifest-write time
+* ``device_epoch``  — epoch the device tier had applied when last marked
+* ``pending_inval`` — journaled invalidation paths committed after
+                      ``device_epoch`` (survives WAL truncation at spill
+                      so device rehydration stays exact)
+
+A crash between segment write and manifest swap leaves an unreferenced
+``seg_*.seg`` file; ``load`` reports live names so the engine can sweep
+orphans.  A crash mid-rename is impossible to observe: ``os.replace`` is
+atomic on POSIX.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+MANIFEST_NAME = "MANIFEST.json"
+
+
+@dataclass
+class Manifest:
+    segments: list[str] = field(default_factory=list)
+    next_seg: int = 1
+    epoch: int = 0
+    device_epoch: int = 0
+    pending_inval: list[str] = field(default_factory=list)
+
+    def alloc_segment(self) -> str:
+        name = f"seg_{self.next_seg:06d}.seg"
+        self.next_seg += 1
+        return name
+
+
+def load(dirname: str) -> Manifest:
+    path = os.path.join(dirname, MANIFEST_NAME)
+    if not os.path.exists(path):
+        return Manifest()
+    with open(path, "r", encoding="utf-8") as f:
+        o = json.load(f)
+    return Manifest(
+        segments=list(o.get("segments", [])),
+        next_seg=int(o.get("next_seg", 1)),
+        epoch=int(o.get("epoch", 0)),
+        device_epoch=int(o.get("device_epoch", 0)),
+        pending_inval=list(o.get("pending_inval", [])),
+    )
+
+
+def store(dirname: str, m: Manifest, sync: bool = True) -> None:
+    """Atomic commit: serialize to ``MANIFEST.json.tmp``, fsync, rename."""
+    path = os.path.join(dirname, MANIFEST_NAME)
+    tmp = path + ".tmp"
+    payload = json.dumps({
+        "segments": m.segments,
+        "next_seg": m.next_seg,
+        "epoch": m.epoch,
+        "device_epoch": m.device_epoch,
+        "pending_inval": m.pending_inval,
+    }, sort_keys=True)
+    with open(tmp, "w", encoding="utf-8") as f:
+        f.write(payload)
+        f.flush()
+        if sync:
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+    if sync:
+        # the rename itself is directory metadata: without this fsync a
+        # power loss after the WAL truncates could resurrect the OLD
+        # manifest and lose the spilled segment
+        from .wal import fsync_dir
+        fsync_dir(dirname)
+
+
+def sweep_orphans(dirname: str, m: Manifest) -> list[str]:
+    """Delete ``seg_*.seg`` files not referenced by the manifest (debris
+    from a crash between segment write and manifest swap)."""
+    live = set(m.segments)
+    removed = []
+    for name in sorted(os.listdir(dirname)):
+        if name.endswith(".seg") and name not in live:
+            os.remove(os.path.join(dirname, name))
+            removed.append(name)
+    return removed

@@ -1,0 +1,163 @@
+"""On-disk sorted segment files (SSTables) with a sparse in-memory index.
+
+A segment is MemKV's frozen run spilled to disk: the whole memtable,
+sorted by key, tombstones included (a delete must shadow older segments
+until a full compaction proves nothing older remains).
+
+Layout (little-endian)::
+
+    magic  b"WSEG1\\n"
+    data   N records: key_len u32 | val_len u32 | key | value
+           (val_len == 0xFFFFFFFF encodes a tombstone; no value bytes)
+    index  every SPARSE_EVERY-th record: key_len u32 | key | offset u64
+    footer index_off u64 | n_index u32 | n_records u32 | magic b"WEND1\\n"
+
+Reads mmap the file: ``get`` is a bisect over the sparse index plus a
+short forward scan (≤ SPARSE_EVERY records) — the LevelDB read shape.
+``scan`` seeks to the index block covering the prefix and walks records
+in key order, yielding tombstones for the merge layer to resolve.
+"""
+from __future__ import annotations
+
+import bisect
+import mmap
+import os
+import struct
+from typing import Iterator
+
+MAGIC = b"WSEG1\n"
+END_MAGIC = b"WEND1\n"
+SPARSE_EVERY = 16
+_TOMB_LEN = 0xFFFFFFFF
+
+_U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+_KV = struct.Struct("<II")
+_FOOTER = struct.Struct("<QII")   # index_off, n_index, n_records
+
+#: sentinel for an on-disk delete; distinct from "key absent" (None is
+#: never returned by segment lookups — absence is reported as MISSING)
+TOMBSTONE = object()
+MISSING = object()
+
+
+def write_sstable(path: str, items: list[tuple[bytes, object]],
+                  sync: bool = True) -> None:
+    """Write sorted ``(key, value | TOMBSTONE)`` items as one segment.
+
+    Writes to ``path`` directly; the caller makes the segment *live* only
+    via the manifest swap, so a torn segment file is unreachable garbage,
+    never corruption.
+    """
+    buf = bytearray(MAGIC)
+    index: list[tuple[bytes, int]] = []
+    for i, (key, value) in enumerate(items):
+        if i % SPARSE_EVERY == 0:
+            index.append((key, len(buf)))
+        if value is TOMBSTONE:
+            buf += _KV.pack(len(key), _TOMB_LEN) + key
+        else:
+            buf += _KV.pack(len(key), len(value)) + key + value
+    index_off = len(buf)
+    for key, off in index:
+        buf += _U32.pack(len(key)) + key + _U64.pack(off)
+    buf += _FOOTER.pack(index_off, len(index), len(items)) + END_MAGIC
+    with open(path, "wb") as f:
+        f.write(bytes(buf))
+        f.flush()
+        if sync:
+            os.fsync(f.fileno())
+    if sync:
+        # the new file's directory entry must hit disk before the
+        # manifest swap advertises it
+        from .wal import fsync_dir
+        fsync_dir(os.path.dirname(path) or ".")
+
+
+class SSTable:
+    """Read side of one immutable segment file."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "rb")
+        try:
+            self._mm = mmap.mmap(self._f.fileno(), 0, access=mmap.ACCESS_READ)
+        except ValueError:          # zero-length file cannot be mmapped
+            self._f.close()
+            raise CorruptSegment(f"empty segment file {path!r}")
+        mm = self._mm
+        foot_at = len(mm) - _FOOTER.size - len(END_MAGIC)
+        if (foot_at < len(MAGIC) or mm[:len(MAGIC)] != MAGIC
+                or mm[-len(END_MAGIC):] != END_MAGIC):
+            self.close()
+            raise CorruptSegment(f"bad segment framing in {path!r}")
+        self._index_off, n_index, self.n_records = _FOOTER.unpack_from(mm, foot_at)
+        self._idx_keys: list[bytes] = []
+        self._idx_offs: list[int] = []
+        off = self._index_off
+        for _ in range(n_index):
+            (klen,) = _U32.unpack_from(mm, off)
+            off += 4
+            self._idx_keys.append(bytes(mm[off:off + klen]))
+            off += klen
+            (doff,) = _U64.unpack_from(mm, off)
+            off += 8
+            self._idx_offs.append(doff)
+
+    # ------------------------------------------------------------------
+    def _read_record(self, off: int) -> tuple[bytes, object, int]:
+        klen, vlen = _KV.unpack_from(self._mm, off)
+        off += _KV.size
+        key = bytes(self._mm[off:off + klen])
+        off += klen
+        if vlen == _TOMB_LEN:
+            return key, TOMBSTONE, off
+        return key, bytes(self._mm[off:off + vlen]), off + vlen
+
+    def get(self, key: bytes) -> object:
+        """→ value bytes, TOMBSTONE, or MISSING."""
+        if not self._idx_keys or key < self._idx_keys[0]:
+            return MISSING
+        block = bisect.bisect_right(self._idx_keys, key) - 1
+        off = self._idx_offs[block]
+        end = (self._idx_offs[block + 1] if block + 1 < len(self._idx_offs)
+               else self._index_off)
+        while off < end:
+            k, v, off = self._read_record(off)
+            if k == key:
+                return v
+            if k > key:
+                break
+        return MISSING
+
+    def scan(self, prefix: bytes) -> Iterator[tuple[bytes, object]]:
+        """Yield (key, value | TOMBSTONE) for keys with ``prefix``, in key
+        order.  Tombstones are yielded — shadowing is the merge layer's
+        job, not the segment's."""
+        if self._idx_keys:
+            block = max(0, bisect.bisect_right(self._idx_keys, prefix) - 1)
+            off = self._idx_offs[block]
+        else:
+            off = len(MAGIC)
+        while off < self._index_off:
+            k, v, off = self._read_record(off)
+            if k.startswith(prefix):
+                yield k, v
+            elif k > prefix:
+                return
+
+    def iter_all(self) -> Iterator[tuple[bytes, object]]:
+        off = len(MAGIC)
+        while off < self._index_off:
+            k, v, off = self._read_record(off)
+            yield k, v
+
+    def close(self) -> None:
+        if getattr(self, "_mm", None) is not None:
+            self._mm.close()
+            self._mm = None
+        self._f.close()
+
+
+class CorruptSegment(RuntimeError):
+    """Segment framing/footer validation failed (torn or foreign file)."""

@@ -512,6 +512,106 @@ def test_apply_delta_refuses_to_empty_the_table():
         TS.apply_delta(wiki, recs, delta)
 
 
+# ---------------------------------------------------------------------------
+# ISSUE 3: durable tier under the engines — epoch-consistent restart
+# ---------------------------------------------------------------------------
+def test_durable_restart_loses_at_most_uncommitted_wave(tmp_path):
+    """Acceptance: recovery after a simulated mid-wave crash loses at
+    most the uncommitted wave — the Δ = 1-wave staleness invariant holds
+    across restart.  Committed waves are exact; the engine resumes the
+    committed epoch sequence."""
+    from repro.storage import open_durable_store
+    root = str(tmp_path / "wiki")
+    store = open_durable_store(root, n_shards=2, sync="none")
+    host = HostEngine(store)
+    pl = BatchPlanner(host)
+    committed: dict[str, str] = {}
+    pl.admit("/d0", R.DirRecord(name="d0"))
+    for wave in range(3):
+        for i in range(2):
+            path = f"/d0/w{wave}_{i}"
+            pl.admit(path, R.FileRecord(name=P.basename(path),
+                                        text=f"{wave}:{i}"))
+            committed[path] = f"{wave}:{i}"
+        pl.flush()
+        host.refresh()                     # wave boundary = WAL commit
+    committed_epoch = host.epoch
+    # mid-wave crash: writes executed (live view sees them) but refresh —
+    # the group commit — never runs
+    pl.admit("/d0/lost", R.FileRecord(name="lost", text="x"))
+    pl.flush()
+    assert store.get("/d0/lost") is not None
+    del pl, host, store                    # crash: no close(), no commit
+
+    reopened = open_durable_store(root, sync="none")
+    host2 = HostEngine(reopened)
+    assert host2.epoch == committed_epoch  # epoch rehydrated, not reset
+    assert reopened.get("/d0/lost") is None
+    for path, text in committed.items():
+        assert reopened.get(path).text == text
+    # the next wave continues the epoch sequence exactly one ahead
+    pl2 = BatchPlanner(host2)
+    pl2.admit("/d0/after", R.FileRecord(name="after", text="y"))
+    pl2.flush()
+    assert host2.refresh() == committed_epoch + 1
+    reopened.close()
+
+
+def test_durable_device_rehydration_epoch_consistent(tmp_path):
+    """DeviceEngine over a reopened durable store: the committed-but-
+    never-device-applied dirty paths journaled in the WAL surface as the
+    rehydration work list, the restored epoch matches the store's last
+    commit, and the rehydrated engine answers every Q1–Q4 batch
+    identically to the host over the same reopened state."""
+    from repro.storage import open_durable_store
+    root = str(tmp_path / "wiki")
+    store = open_durable_store(root, sync="none")
+    store.put_record("/", R.DirRecord(name=""))
+    store.flush()
+    # the real mirror topology: the device engine attaches the WAL
+    # journal (only a device consumer may — its DEVMARKs clear it); the
+    # host engine shares its writer/bus and commits write waves, but the
+    # device mirror never refreshes before the crash
+    dev = DeviceEngine.from_store(store)
+    host = HostEngine(store, writer=dev.writer)
+    pl = BatchPlanner(host)
+    pl.admit("/d0", R.DirRecord(name="d0"))
+    pl.admit("/d0/e0", R.FileRecord(name="e0", text="v0"))
+    pl.flush()
+    host.refresh()
+    assert store.pending_invalidations()   # journaled, not device-applied
+    del pl, host, dev, store               # crash
+
+    reopened = open_durable_store(root, sync="none")
+    pending_before = set(reopened.pending_invalidations())
+    assert {"/d0", "/d0/e0"} <= pending_before
+    dev = DeviceEngine.from_store(reopened)
+    assert dev.epoch == 1
+    assert set(dev.rehydrated_paths) == pending_before
+    # the fresh freeze subsumed the pending deltas: journal now applied
+    assert reopened.pending_invalidations() == []
+    host2 = HostEngine(reopened)
+    probe = reopened.all_paths() + ["/d0/ghost"]
+    assert dev.q1_get(probe) == host2.q1_get(probe)
+    assert dev.q4_search(["/", "/d0"]) == host2.q4_search(["/", "/d0"])
+    # Δ = 1 wave still holds post-restart: same-wave writes invisible,
+    # visible after exactly one refresh, and the DEVMARK makes the next
+    # reopen rehydrate nothing
+    pl2 = BatchPlanner(dev)
+    pl2.admit("/d0/e1", R.FileRecord(name="e1", text="v1"))
+    f_read = pl2.get("/d0/e1")
+    pl2.flush()
+    assert f_read.value is None
+    assert dev.refresh() == 2
+    assert dev.q1_get(["/d0/e1"])[0].text == "v1"
+    reopened.close()
+    again = open_durable_store(root, sync="none")
+    dev2 = DeviceEngine.from_store(again)
+    assert dev2.epoch == 2 and dev2.rehydrated_paths == []
+    assert dev2.q1_get(["/d0/e1"])[0].text == "v1"
+    again.close()
+
+
 def test_per_item_write_failures_never_poison_the_wave():
     """Invalid writes resolve their own futures to the exception; every
     other write in the wave lands and every future resolves."""

@@ -1,0 +1,411 @@
+"""Durable storage tier (ISSUE 3): WAL framing + CRC, SSTable segments,
+DurableKV crash recovery, and byte-identical store reopen."""
+import os
+import shutil
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import paths as P
+from repro.core import records as R
+from repro.core.oracle import HeuristicOracle
+from repro.core.pipeline import ConstructionPipeline, PipelineConfig
+from repro.core.store import MemKV, PathStore
+from repro.data.corpus import AuthTraceConfig, generate_authtrace
+from repro.storage import (DurableKV, SSTable, open_durable_store,
+                           write_sstable)
+from repro.storage import manifest as MF
+from repro.storage import wal as W
+from repro.storage.lsm import WAL_NAME
+from repro.storage.sstable import MISSING, TOMBSTONE
+
+
+# ---------------------------------------------------------------------------
+# WAL
+# ---------------------------------------------------------------------------
+def test_wal_commit_boundaries_and_replay(tmp_path):
+    p = str(tmp_path / "t.wal")
+    w = W.WAL(p, sync="none")
+    w.append_put(b"a", b"1")
+    w.append_delete(b"b")
+    w.append_inval("/d0/e0")
+    w.commit(1)
+    w.append_put(b"c", b"3")
+    w.commit(2)
+    w.append_put(b"never", b"committed")   # buffered, no commit
+    w.close()
+    res = W.replay(p)
+    assert len(res.waves) == 2
+    kinds = [rec.kind for rec in res.waves[0]]
+    assert kinds == [W.PUT, W.DEL, W.INV, W.COMMIT]
+    assert res.waves[0][2].path == "/d0/e0"
+    assert res.waves[1][0].key == b"c"
+    assert res.waves[1][-1].epoch == 2
+    assert res.dropped_records == 0 and not res.corrupt_tail
+    assert res.valid_end == os.path.getsize(p)   # buffer never hit disk
+
+
+def test_wal_corrupt_tail_detected_and_dropped(tmp_path):
+    p = str(tmp_path / "t.wal")
+    w = W.WAL(p, sync="none")
+    w.append_put(b"k", b"v")
+    w.commit(1)
+    w.close()
+    good = os.path.getsize(p)
+    # flip a byte inside an appended (committed-looking) record
+    w2 = W.WAL(p, sync="none")
+    w2.append_put(b"x", b"y")
+    w2.commit(2)
+    w2.close()
+    with open(p, "rb+") as f:
+        f.seek(good + 10)
+        b = f.read(1)
+        f.seek(good + 10)
+        f.write(bytes([b[0] ^ 0xFF]))
+    res = W.replay(p)
+    assert res.corrupt_tail
+    assert len(res.waves) == 1                    # only the intact wave
+    assert res.valid_end == good
+
+
+def test_wal_zero_filled_torn_tail(tmp_path):
+    """A zero-filled tail (torn page after power loss) frames as
+    crc=0/len=0, which crc32(b'') would pass — replay must still treat
+    it as corrupt and the store must reopen cleanly."""
+    p = str(tmp_path / "t.wal")
+    w = W.WAL(p, sync="none")
+    w.append_put(b"k", b"v")
+    w.commit(1)
+    w.close()
+    good = os.path.getsize(p)
+    with open(p, "ab") as f:
+        f.write(b"\x00" * 64)
+    res = W.replay(p)
+    assert res.corrupt_tail and res.valid_end == good
+    assert res.waves[-1][-1].epoch == 1
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, sync="none")
+    kv.put(b"a", b"1")
+    kv.commit_epoch(1)
+    kv.close()
+    with open(os.path.join(d, WAL_NAME), "ab") as f:
+        f.write(b"\x00" * 64)
+    kv2 = DurableKV(d, sync="none")               # must not raise
+    assert kv2.recovery_corrupt_tail and kv2.get(b"a") == b"1"
+    kv2.close()
+
+
+def test_compact_after_reopen_preserves_committed_epoch(tmp_path):
+    """Regression: the manifest written by a post-reopen spill/compact
+    must carry the WAL-replayed epoch — the spill truncates the WAL that
+    was the only record of it."""
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=10**9, sync="none")
+    for e in range(1, 6):
+        kv.put(f"k{e}".encode(), b"v")
+        kv.commit_epoch(e)
+    kv.close()
+    kv2 = DurableKV(d, sync="none")
+    assert kv2.last_epoch() == 5
+    kv2.compact()                                 # spills + truncates WAL
+    kv2.close()
+    kv3 = DurableKV(d, sync="none")
+    assert kv3.last_epoch() == 5, "compaction regressed the committed epoch"
+    kv3.close()
+
+
+def test_wal_torn_partial_frame(tmp_path):
+    p = str(tmp_path / "t.wal")
+    w = W.WAL(p, sync="none")
+    w.append_put(b"k", b"v")
+    w.commit(3)
+    w.close()
+    good = os.path.getsize(p)
+    with open(p, "ab") as f:
+        f.write(b"\x07\x00")                      # half a header
+    res = W.replay(p)
+    assert res.corrupt_tail and res.valid_end == good
+    assert res.waves[-1][-1].epoch == 3
+
+
+# ---------------------------------------------------------------------------
+# SSTable
+# ---------------------------------------------------------------------------
+def test_sstable_get_scan_tombstones(tmp_path):
+    items = sorted({f"k{i:03d}".encode(): f"v{i}".encode()
+                    for i in range(100)}.items())
+    items[7] = (items[7][0], TOMBSTONE)
+    p = str(tmp_path / "a.seg")
+    write_sstable(p, items, sync=False)
+    t = SSTable(p)
+    assert t.n_records == 100
+    assert t.get(b"k005") == b"v5"
+    assert t.get(items[7][0]) is TOMBSTONE        # delete persisted as such
+    assert t.get(b"k0999") is MISSING
+    assert t.get(b"a") is MISSING                 # before first key
+    got = dict(t.scan(b"k01"))
+    assert len(got) == 10 and got[b"k012"] == b"v12"
+    assert len(list(t.iter_all())) == 100
+    t.close()
+
+
+def test_sstable_sparse_index_boundaries(tmp_path):
+    # exactly SPARSE_EVERY-aligned + not-aligned sizes, single record
+    for n in (1, 16, 17, 31):
+        items = [(f"{i:04d}".encode(), b"x" * i) for i in range(n)]
+        p = str(tmp_path / f"s{n}.seg")
+        write_sstable(p, items, sync=False)
+        t = SSTable(p)
+        for k, v in items:
+            assert t.get(k) == v
+        assert t.get(b"zzzz") is MISSING
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# DurableKV — crash recovery + MemKV parity
+# ---------------------------------------------------------------------------
+def test_tombstone_survives_spill_and_reopen(tmp_path):
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=4, sync="none")
+    for i in range(6):
+        kv.put(f"k{i}".encode(), b"old")
+    kv.commit_epoch(1)                 # spills: all six live in segment 1
+    kv.delete(b"k3")
+    kv.put(b"k0", b"new")
+    for i in range(6, 12):
+        kv.put(f"k{i}".encode(), b"fresh")
+    kv.commit_epoch(2)                 # spills again: tombstone in segment 2
+    assert len(kv._manifest.segments) == 2
+    kv.close()
+    kv2 = DurableKV(d, sync="none")
+    assert kv2.get(b"k3") is None, "delete resurrected across reopen"
+    assert kv2.get(b"k0") == b"new"
+    assert b"k3" not in dict(kv2.scan(b"k"))
+    kv2.compact()                      # full merge may now drop the tombstone
+    kv2.close()
+    kv3 = DurableKV(d, sync="none")
+    assert kv3.get(b"k3") is None
+    assert kv3.get(b"k11") == b"fresh"
+    kv3.close()
+
+
+def test_crash_between_segment_write_and_manifest_swap(tmp_path):
+    """The spill order is segment → manifest → WAL truncate; a crash
+    after the segment write but before the manifest swap must lose
+    nothing (WAL still holds the wave) and resurrect nothing (the orphan
+    segment is swept)."""
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=10**9, sync="none")
+    kv.put(b"a", b"1")
+    kv.commit_epoch(1)
+    kv.close()
+    # simulate the crashed spill: an orphan segment containing records
+    # that were NEVER committed, plus one committed key with a bogus value
+    write_sstable(os.path.join(d, "seg_000042.seg"),
+                  [(b"a", b"bogus"), (b"ghost", b"uncommitted")], sync=False)
+    kv2 = DurableKV(d, sync="none")
+    assert kv2.get(b"a") == b"1"                 # WAL replay wins
+    assert kv2.get(b"ghost") is None             # orphan swept, not adopted
+    assert not os.path.exists(os.path.join(d, "seg_000042.seg"))
+    assert kv2.last_epoch() == 1
+    kv2.close()
+
+
+def test_uncommitted_wave_lost_committed_waves_exact(tmp_path):
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=4, sync="none")
+    committed = {}
+    for wave in range(5):
+        for i in range(3):
+            k = f"w{wave}k{i}".encode()
+            kv.put(k, f"{wave}:{i}".encode())
+            committed[k] = f"{wave}:{i}".encode()
+        kv.commit_epoch(wave + 1)
+    kv.put(b"uncommitted", b"x")                 # crash before commit
+    del kv
+    kv2 = DurableKV(d, sync="none")
+    assert kv2.last_epoch() == 5
+    assert kv2.get(b"uncommitted") is None
+    assert dict(kv2.scan(b"")) == committed
+    kv2.close()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["put", "delete", "commit"]),
+                          st.integers(0, 30), st.binary(min_size=0, max_size=6)),
+                min_size=1, max_size=80))
+def test_durablekv_matches_memkv_and_survives_reopen(tmp_path_factory, ops):
+    """Acceptance property: the same op sequence applied to MemKV and
+    DurableKV yields identical get/scan results — before close, and
+    byte-identical again after close + reopen from disk."""
+    d = str(tmp_path_factory.mktemp("kv"))
+    ref = MemKV(memtable_limit=7)
+    kv = DurableKV(d, memtable_limit=7, sync="none")
+    epoch = 0
+    for op, ki, v in ops:
+        k = f"{ki:04d}".encode()
+        if op == "put":
+            ref.put(k, v)
+            kv.put(k, v)
+        elif op == "delete":
+            ref.delete(k)
+            kv.delete(k)
+        else:
+            epoch += 1
+            kv.commit_epoch(epoch)
+    keys = [f"{i:04d}".encode() for i in range(31)]
+    assert [kv.get(k) for k in keys] == [ref.get(k) for k in keys]
+    assert list(kv.scan(b"")) == list(ref.scan(b""))
+    assert list(kv.scan(b"001")) == list(ref.scan(b"001"))
+    kv.close()                                   # commits the open tail
+    kv2 = DurableKV(d, sync="none")
+    assert [kv2.get(k) for k in keys] == [ref.get(k) for k in keys]
+    assert list(kv2.scan(b"")) == list(ref.scan(b""))
+    kv2.close()
+
+
+def test_commit_epoch_monotone_and_advance_durable(tmp_path):
+    """Regression: a lagging engine (device mirror with a trailing
+    counter) must not move the committed epoch backwards, and an epoch
+    ADVANCE is recorded durably even when the wave carried no content."""
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=10**9, sync="none")
+    kv.put(b"a", b"1")
+    kv.commit_epoch(3)
+    kv.commit_epoch(1)                 # lagging caller: clamped, no regress
+    assert kv.last_epoch() == 3
+    kv.commit_epoch(4)                 # content-free advance: still durable
+    kv.close()
+    kv2 = DurableKV(d, sync="none")
+    assert kv2.last_epoch() == 4
+    kv2.close()
+
+
+def test_manifest_atomic_and_orphan_sweep(tmp_path):
+    d = str(tmp_path)
+    m = MF.Manifest(segments=["seg_000001.seg"], next_seg=2, epoch=7,
+                    device_epoch=5, pending_inval=["/a"])
+    MF.store(d, m, sync=False)
+    assert not os.path.exists(os.path.join(d, MF.MANIFEST_NAME + ".tmp"))
+    m2 = MF.load(d)
+    assert (m2.segments, m2.next_seg, m2.epoch, m2.device_epoch,
+            m2.pending_inval) == (["seg_000001.seg"], 2, 7, 5, ["/a"])
+    open(os.path.join(d, "seg_000009.seg"), "wb").close()
+    removed = MF.sweep_orphans(d, m2)
+    assert removed == ["seg_000009.seg"]
+
+
+# ---------------------------------------------------------------------------
+# PathStore / ShardedPathStore over the durable tier
+# ---------------------------------------------------------------------------
+def _store_signature(store):
+    """Byte-level signature of every Q1/Q3/Q4 surface the wiki exposes."""
+    paths = store.all_paths()
+    sig = {"paths": paths}
+    sig["records"] = {p: R.encode(store.get(p)) for p in paths}
+    sig["navigate"] = {p: [R.encode(r) for r in store.navigate(p)]
+                       for p in paths}
+    prefixes = sorted({"/" + P.segments(p)[0] for p in paths if p != "/"})
+    sig["search"] = {pref: store.search(pref) for pref in prefixes}
+    sig["contains"] = {tok: store.search_contains(tok)
+                       for tok in ("rel", "zhou", "nothere")}
+    return sig
+
+
+def test_pipeline_built_sharded_durable_reopens_byte_identical(tmp_path):
+    """ISSUE 3 acceptance: a DurableKV-backed ShardedPathStore built by
+    the construction pipeline can be closed and reopened from disk with
+    byte-identical get/navigate/search results — zero re-ingestion."""
+    root = str(tmp_path / "wiki")
+    store = open_durable_store(root, n_shards=3, memtable_limit=64,
+                               sync="none")
+    docs, _ = generate_authtrace(AuthTraceConfig(n_docs=24, n_questions=4,
+                                                 seed=11))
+    pipe = ConstructionPipeline(PipelineConfig(), HeuristicOracle(),
+                                store=store)
+    pipe.bootstrap(docs)
+    pipe.ingest(docs)
+    assert store.durable
+    before = _store_signature(store)
+    assert len(before["paths"]) > 20
+    store.close()
+
+    # reopen picks up the persisted shard count (routing-compatible)
+    reopened = open_durable_store(root, sync="none")
+    assert reopened.n_shards == 3
+    assert _store_signature(reopened) == before
+    # the namespace really is spread over per-shard directories on disk
+    shard_dirs = [n for n in sorted(os.listdir(root)) if n.startswith("shard_")]
+    assert len(shard_dirs) == 3
+    per_shard = [s.count() for s in reopened.shards]
+    assert sum(per_shard) == len(before["paths"]) and max(per_shard) < sum(per_shard)
+    reopened.close()
+
+
+def test_host_only_durable_store_does_not_journal(tmp_path):
+    """The WAL invalidation journal is attached only by a device
+    consumer: a pipeline/host-only durable store must not accumulate an
+    unbounded pending_invalidations list."""
+    root = str(tmp_path / "wiki")
+    store = open_durable_store(root, sync="none")
+    docs, _ = generate_authtrace(AuthTraceConfig(n_docs=12, n_questions=2,
+                                                 seed=3))
+    pipe = ConstructionPipeline(PipelineConfig(), HeuristicOracle(),
+                                store=store)
+    pipe.bootstrap(docs)
+    pipe.ingest(docs)
+    assert pipe.bus.journal is None
+    assert store.pending_invalidations() == []
+    store.close()
+    reopened = open_durable_store(root, sync="none")
+    assert reopened.pending_invalidations() == []
+    reopened.close()
+
+
+def test_reopen_with_wrong_shard_count_refuses(tmp_path):
+    root = str(tmp_path / "wiki")
+    open_durable_store(root, n_shards=2, sync="none").close()
+    with pytest.raises(ValueError, match="n_shards"):
+        open_durable_store(root, n_shards=4, sync="none")
+
+
+def test_single_shard_store_roundtrip(tmp_path):
+    root = str(tmp_path / "solo")
+    store = open_durable_store(root, sync="none")
+    assert isinstance(store, PathStore) and isinstance(store.engine, DurableKV)
+    store.put_record("/", R.DirRecord(name=""))
+    store.put_record("/dim", R.DirRecord(name="dim"))
+    store.put_record("/dim/leaf", R.FileRecord(name="leaf", text="payload"))
+    store.flush()
+    store.close()
+    again = open_durable_store(root, sync="none")
+    assert again.get("/dim/leaf").text == "payload"
+    assert again.search("/dim") == ["/dim", "/dim/leaf"]
+    assert again.search_contains("leaf") == ["/dim/leaf"]
+    again.close()
+
+
+def test_sync_mode_env_knob(tmp_path, monkeypatch):
+    monkeypatch.setenv(W.SYNC_ENV, "none")
+    kv = DurableKV(str(tmp_path / "kv"))
+    assert kv._sync == "none"
+    kv.close()
+    monkeypatch.setenv(W.SYNC_ENV, "bogus")
+    with pytest.raises(ValueError, match="sync mode"):
+        DurableKV(str(tmp_path / "kv2"))
+
+
+def test_wal_directory_cleanup_shapes(tmp_path):
+    """The scratch layout smoke.sh sweeps: *.wal + *.seg under the store
+    dir, nothing else leaking elsewhere."""
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=2, sync="none")
+    for i in range(8):
+        kv.put(f"k{i}".encode(), b"v")
+    kv.commit_epoch(1)
+    kv.close()
+    names = sorted(os.listdir(d))
+    assert WAL_NAME in names
+    assert any(n.endswith(".seg") for n in names)
+    shutil.rmtree(d)
