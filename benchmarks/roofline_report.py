@@ -7,11 +7,23 @@ read from the dry-run artifacts (no recompilation).
 
 Flags the dominant term, the MODEL_FLOPS/HLO_FLOPS 'useful compute'
 ratio, and per-device memory vs the 16 GiB v5e HBM budget.
+
+A second section times the *storage* kernels live (ISSUE 6): the real
+Pallas paths — ``path_lookup`` with its VMEM pinned probe, and
+``prefix_search`` — under ``REPRO_FORCE_PALLAS=1`` (interpret mode on
+this CPU container; compiled on TPU) against the jitted XLA references
+(``REPRO_DISABLE_PALLAS=1``).  The interpreter-vs-compiled delta rows
+land in the bench-gate JSON artifact so kernel-path drift is tracked
+per PR even before TPU time.
 """
 from __future__ import annotations
 
 import json
+import os
+import time
 from pathlib import Path
+
+import numpy as np
 
 from common import ARTIFACTS, emit
 
@@ -26,6 +38,108 @@ def load_cells(mesh: str | None = None):
             continue
         cells.append(rec)
     return cells
+
+
+def _timed_ms(fn, iters: int = 5) -> float:
+    fn()  # warmup (trace/compile)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1000)
+    return float(np.median(ts))
+
+
+def _mode_env(mode: str):
+    """Pin the kernels.ops dispatch: "pallas" forces the Pallas kernels
+    (interpret mode off-TPU), "ref" forces the jitted XLA references."""
+    prev = {k: os.environ.get(k)
+            for k in ("REPRO_FORCE_PALLAS", "REPRO_DISABLE_PALLAS")}
+    os.environ.pop("REPRO_FORCE_PALLAS", None)
+    os.environ.pop("REPRO_DISABLE_PALLAS", None)
+    os.environ["REPRO_FORCE_PALLAS" if mode == "pallas"
+               else "REPRO_DISABLE_PALLAS"] = "1"
+    return prev
+
+
+def _restore_env(prev: dict) -> None:
+    for k, v in prev.items():
+        if v is None:
+            os.environ.pop(k, None)
+        else:
+            os.environ[k] = v
+
+
+def storage_kernel_rows(n_keys: int = 2048, n_q: int = 512,
+                        n_pin: int = 8, iters: int = 5) -> list[tuple]:
+    """Time the storage kernels on both dispatch paths and report the
+    interpreter-vs-compiled delta (see module docstring)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.kernels.path_lookup import pad_pinned
+
+    rng = np.random.default_rng(0)
+    keys = np.sort(rng.choice(2**62, size=n_keys, replace=False)
+                   .astype(np.uint64))
+    khi = jnp.asarray((keys >> np.uint64(32)).astype(np.uint32))
+    klo = jnp.asarray((keys & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    # query mix: half hits (some pinned), half misses
+    hit = keys[rng.integers(0, n_keys, size=n_q // 2)]
+    miss = rng.choice(2**62, size=n_q - n_q // 2).astype(np.uint64) | 1
+    q = np.concatenate([hit, miss])
+    qhi = jnp.asarray((q >> np.uint64(32)).astype(np.uint32))
+    qlo = jnp.asarray((q & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    pin_idx = np.sort(rng.choice(n_keys, size=n_pin, replace=False))
+    pinned = tuple(jnp.asarray(a) for a in pad_pinned(
+        (keys[pin_idx] >> np.uint64(32)).astype(np.uint32),
+        (keys[pin_idx] & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+        pin_idx.astype(np.int32)))
+    L = 96
+    toks = np.zeros((n_keys, L), dtype=np.uint8)
+    for i in range(n_keys):
+        p = f"/dim{i % 16}/doc{i}".encode()
+        toks[i, :len(p)] = np.frombuffer(p, dtype=np.uint8)
+    toks_j = jnp.asarray(toks)
+    prefs = np.full((8, L), 255, dtype=np.uint8)
+    lens = np.full((8,), 1, dtype=np.int32)
+    for i in range(8):
+        p = f"/dim{i}".encode()
+        prefs[i, :len(p)] = np.frombuffer(p, dtype=np.uint8)
+        lens[i] = len(p)
+    prefs_j, lens_j = jnp.asarray(prefs), jnp.asarray(lens)
+
+    def lookup():
+        np.asarray(ops.path_lookup(khi, klo, qhi, qlo, pinned=pinned))
+
+    def prefix():
+        np.asarray(ops.prefix_search(toks_j, prefs_j, lens_j))
+
+    rows, ms = [], {}
+    for mode in ("pallas", "ref"):
+        prev = _mode_env(mode)
+        try:
+            ms[("lookup", mode)] = _timed_ms(lookup, iters)
+            ms[("prefix", mode)] = _timed_ms(prefix, iters)
+        finally:
+            _restore_env(prev)
+    on_tpu = False
+    try:
+        import jax
+        on_tpu = jax.devices()[0].platform == "tpu"
+    except Exception:
+        pass
+    kind = "compiled" if on_tpu else "interpret"
+    for op in ("lookup", "prefix"):
+        p_ms, r_ms = ms[(op, "pallas")], ms[(op, "ref")]
+        rows.append((f"roofline_storage_{op}_pallas_{kind}",
+                     round(p_ms, 3),
+                     f"ms;keys={n_keys};q={n_q};pinned={n_pin}"))
+        rows.append((f"roofline_storage_{op}_ref_compiled",
+                     round(r_ms, 3), "ms;jitted_xla_reference"))
+        rows.append((f"roofline_storage_{op}_{kind}_vs_compiled",
+                     round(p_ms / max(r_ms, 1e-9), 2),
+                     "x;pallas_over_ref"))
+    return rows
 
 
 def run(mesh: str = "16x16"):
@@ -51,7 +165,9 @@ def run(mesh: str = "16x16"):
             f"mem={mem/2**30:.1f}GiB;"
             f"fits16G={'Y' if mem <= HBM_BUDGET else 'N'}"))
     emit(rows, header=f"Roofline terms per cell ({mesh})")
-    return rows
+    kernel_rows = storage_kernel_rows()
+    emit(kernel_rows, header="Storage kernels: Pallas path vs XLA reference")
+    return rows + kernel_rows
 
 
 if __name__ == "__main__":

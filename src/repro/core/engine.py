@@ -44,6 +44,7 @@ every Q1–Q4 batch, including misses and unadvertised orphans.
 """
 from __future__ import annotations
 
+import bisect
 import threading
 from dataclasses import dataclass, field
 from typing import Callable, Iterator, Optional, Sequence
@@ -267,10 +268,12 @@ class QueryEngine:
         if commit is not None:
             commit(self.epoch)
 
-    def refresh(self) -> int:
+    def refresh(self, force: bool = False) -> int:
         """Commit admitted writes to the read view and return the new
         epoch.  Called by wave drivers between waves; a no-op (same
-        epoch) when nothing was written since the last refresh."""
+        epoch) when nothing was written since the last refresh.
+        ``force`` overrides a DeviceEngine refresh cadence > 1 — drain
+        paths (snapshot, shutdown) use it to guarantee full visibility."""
         if self._pending_writes:
             self._pending_writes = 0
             self.epoch += 1
@@ -459,10 +462,10 @@ class HostEngine(QueryEngine):
         # a host-only attach would grow the pending list forever
         self._restore_epoch()
 
-    def refresh(self) -> int:
+    def refresh(self, force: bool = False) -> int:
         if self.writer.bus is not None:
             self.writer.bus.drain()
-        return super().refresh()
+        return super().refresh(force)
 
     def q1_get(self, paths):
         self.stats.record(Q1, len(paths))
@@ -495,6 +498,23 @@ def _token_hash(token: str) -> int:
     return P.path_hash(token)
 
 
+class _EpochView:
+    """One epoch's immutable device-side state — the read buffer of the
+    double-buffered swap.
+
+    Every read method captures ``st = self._st`` exactly once, so an
+    in-flight batch keeps reading epoch e even if ``refresh()`` installs
+    e+1 concurrently: installing is a single reference assignment, and no
+    field of an installed view is ever written again (patch refreshes
+    build the successor with jax functional updates / fresh overlay
+    dicts, never in-place writes to the previous view's buffers).
+    """
+
+    __slots__ = ("wiki", "records", "paths", "khi", "klo", "view_rows",
+                 "ptoks", "pinned", "tok_hi", "tok_lo", "tok_offsets",
+                 "tok_rows", "tok_patch", "tok_extra")
+
+
 class DeviceEngine(QueryEngine):
     """Batched operators over the epoch-versioned tensor index.
 
@@ -509,10 +529,29 @@ class DeviceEngine(QueryEngine):
     e.g. evolution passes and errorbook repairs) accumulate as dirty-path
     invalidations.  ``refresh()`` drains the bus, materializes ONE
     ``TensorDelta`` (O(|dirty|) point gets against the store — no
-    full-store re-freeze pass), applies it to the resident ``TensorWiki``
-    and bumps ``epoch``.  Reads between two refreshes all execute against
-    the same frozen epoch, so an in-flight wave observes one consistent
-    snapshot; the applied deltas are kept in ``delta_log``.
+    full-store re-freeze pass), applies it via ``tensorstore.
+    apply_delta_ex`` and bumps ``epoch``.  Small deltas take the in-place
+    **patch** path (O(|Δ|): scatter the touched token rows, reuse every
+    other device buffer of the previous epoch); large ones rebuild.
+
+    **Double-buffered epoch swap** — all derived read state lives in one
+    immutable ``_EpochView``; ``refresh()`` constructs epoch e+1's view
+    off to the side and installs it with a single reference assignment.
+    Readers that captured epoch e's view (every method does, once) are
+    unaffected mid-batch — the snapshot-exactness the epoch contract
+    promises, now preserved *through* the swap instead of by forbidding
+    concurrent refreshes.
+
+    **Refresh cadence** — ``refresh_cadence=k`` commits only every k-th
+    refresh request (``force=True`` overrides, e.g. snapshot drains), so
+    refresh cost amortizes over k waves at the price of staleness Δ = k
+    waves (property-tested; benchmarks/table5_online.py reports the lag
+    distribution).  ``refresh_mode`` pins ``apply_delta_ex``'s mode —
+    benchmarks use "patch"/"rebuild" to isolate the two cost curves.
+
+    The pinned hot set ("/" + dimensions) is staged per epoch as
+    (hi, lo, sorted-view position) triples for the kernel's VMEM level-0
+    probe — see kernels/path_lookup.py.
     """
 
     #: refresh history retained for diagnostics/benchmarks
@@ -522,11 +561,19 @@ class DeviceEngine(QueryEngine):
                  depth_budget: int | None = P.DEFAULT_DEPTH_BUDGET,
                  store: "PathStore | ShardedPathStore | None" = None,
                  writer: WikiWriter | None = None,
-                 bus: InvalidationBus | None = None):
+                 bus: InvalidationBus | None = None,
+                 refresh_cadence: int = 1,
+                 refresh_mode: str = "auto"):
         super().__init__()
         self.depth_budget = depth_budget
         self.store = store
         self.delta_log: list = []
+        self.refresh_cadence = max(1, int(refresh_cadence))
+        self.refresh_mode = refresh_mode
+        #: how the last committed refresh was applied ("materialize" |
+        #: "patch" | "rebuild") — benchmarks assert the mode they measure
+        self.last_refresh_kind = "materialize"
+        self._deferred_waves = 0
         self._dirty: set[str] = set()
         #: dirty paths rehydrated from the durable tier's committed
         #: invalidation journal at construction (diagnostics/tests)
@@ -547,48 +594,164 @@ class DeviceEngine(QueryEngine):
     def _note_dirty(self, ev) -> None:
         self._dirty.add(ev.path)
 
+    # -- epoch views ---------------------------------------------------
+    @property
+    def wiki(self):
+        return self._st.wiki
+
+    @property
+    def records(self) -> list[Optional[R.Record]]:
+        return self._st.records
+
+    def epoch_view(self) -> _EpochView:
+        """The current epoch's immutable snapshot (tests/benchmarks pin
+        it the same way reads do: capture once, use throughout)."""
+        return self._st
+
     def _install(self, wiki, records: list[Optional[R.Record]]) -> None:
-        """(Re)build every derived device structure for a new snapshot:
-        padded digest table + token-digest table/CSR.  Called once at
-        construction and once per committed refresh."""
+        """Full (re)build of every derived device structure for a fresh
+        materialized/rebuilt snapshot.  Called at construction and per
+        committed rebuild refresh; patch refreshes take ``_patch_install``
+        (O(|Δ|)) instead."""
         import jax.numpy as jnp
         from ..kernels.ops import pad_keys
-        self.wiki = wiki
-        self.records = records
-        # pad the digest table once so the Pallas kernel path is eligible
-        khi, klo = pad_keys(np.asarray(wiki.keys_hi), np.asarray(wiki.keys_lo))
-        self._khi = jnp.asarray(khi)
-        self._klo = jnp.asarray(klo)
-        self._lex_order = np.asarray(wiki.lex_order)
-        self._max_path_bytes = int(wiki.lex_tokens.shape[1])
+        st = _EpochView()
+        st.wiki = wiki
+        st.records = records
+        st.paths = wiki.paths
+        # pad the digest view once so the Pallas kernel path is eligible
+        khi_v, klo_v, view_rows = wiki.search_view()
+        khi, klo = pad_keys(np.asarray(khi_v), np.asarray(klo_v))
+        st.khi = jnp.asarray(khi)
+        st.klo = jnp.asarray(klo)
+        st.view_rows = np.asarray(view_rows)
+        # explicit copy: jnp.asarray can zero-copy a host numpy array, and
+        # the patch path mutates wiki.path_tokens in place — the epoch
+        # view's device buffer must not alias the mutable master
+        st.ptoks = jnp.asarray(np.array(wiki.path_tokens))
+        st.pinned = self._stage_pinned(wiki, khi_v, klo_v)
+        self._max_path_bytes = int(wiki.path_tokens.shape[1])
         # device token-digest table: sorted FNV digests of every segment
         # token + CSR of matching path rows (rows pre-sorted by path bytes,
-        # the same order the host token-index scan yields)
-        tok_paths: dict[str, list[int]] = {}
-        for row, path in enumerate(wiki.paths):
+        # the same order the host token-index scan yields).  The master
+        # token map lives on the engine so patches can maintain it; the
+        # packed arrays live on the view and are immutable per epoch.
+        tok_map: dict[str, list[int]] = {}
+        for path, row in wiki.row_of.items():
             for tok in _segment_tokens(path):
-                tok_paths.setdefault(tok, []).append(row)
-        toks = sorted(tok_paths, key=_token_hash)
+                tok_map.setdefault(tok, []).append(row)
+        for rows in tok_map.values():
+            rows.sort(key=lambda r: wiki.paths[r])
+        self._tok_map = tok_map
+        toks = sorted(tok_map, key=_token_hash)
+        self._tok_idx = {t: i for i, t in enumerate(toks)}
         tdig = np.array([_token_hash(t) for t in toks], dtype=np.uint64)
         t_off = np.zeros((len(toks) + 1,), dtype=np.int32)
         t_rows: list[int] = []
         for i, t in enumerate(toks):
-            rows = sorted(tok_paths[t], key=lambda r: wiki.paths[r])
-            t_rows.extend(rows)
+            t_rows.extend(tok_map[t])
             t_off[i + 1] = len(t_rows)
         thi, tlo = pad_keys(
             (tdig >> np.uint64(32)).astype(np.uint32),
             (tdig & np.uint64(0xFFFFFFFF)).astype(np.uint32))
-        self._tok_hi = jnp.asarray(thi)
-        self._tok_lo = jnp.asarray(tlo)
-        self._tok_offsets = t_off
-        self._tok_rows = np.asarray(t_rows, dtype=np.int32)
+        st.tok_hi = jnp.asarray(thi)
+        st.tok_lo = jnp.asarray(tlo)
+        st.tok_offsets = t_off
+        st.tok_rows = np.asarray(t_rows, dtype=np.int32)
+        st.tok_patch = {}
+        st.tok_extra = {}
+        self._st = st
+        self.last_refresh_kind = wiki.refresh_kind
+
+    def _stage_pinned(self, wiki, khi_view: np.ndarray, klo_view: np.ndarray):
+        """Stage the pinned hot set ("/" + every dimension — the paper's
+        L1 tier) for the kernel's VMEM level-0 probe: (hi, lo, position)
+        where position is the row's rank in the sorted search view — the
+        value the HBM binary search would produce."""
+        import jax.numpy as jnp
+        from ..kernels.ops import pad_pinned
+        prow = wiki.pinned_rows()
+        phi = np.asarray(wiki.keys_hi[prow])
+        plo = np.asarray(wiki.keys_lo[prow])
+        k64 = (khi_view.astype(np.uint64) << np.uint64(32)) | klo_view.astype(np.uint64)
+        p64 = (phi.astype(np.uint64) << np.uint64(32)) | plo.astype(np.uint64)
+        pos = np.searchsorted(k64, p64).astype(np.int32)
+        phi_p, plo_p, pos_p = pad_pinned(phi, plo, pos)
+        return (jnp.asarray(phi_p), jnp.asarray(plo_p), jnp.asarray(pos_p))
+
+    def _patch_install(self, prev: _EpochView, wiki,
+                       records: list[Optional[R.Record]], info) -> None:
+        """O(|Δ|) successor view for an in-place patch refresh: reuse the
+        previous epoch's device buffers wherever the patch left them
+        valid, functionally update the rest.  Epoch e's buffers are never
+        written — jax ``.at[].set`` allocates the successor, and overlay
+        dicts are copied — so readers holding e keep a consistent view
+        through the swap."""
+        import jax.numpy as jnp
+        from ..kernels.ops import pad_keys
+        st = _EpochView()
+        st.wiki = wiki
+        st.records = records
+        st.paths = wiki.paths
+        if info.keys_changed:
+            khi_v, klo_v, view_rows = wiki.search_view()
+            khi, klo = pad_keys(np.asarray(khi_v), np.asarray(klo_v))
+            st.khi = jnp.asarray(khi)
+            st.klo = jnp.asarray(klo)
+            st.view_rows = np.asarray(view_rows)
+            # any membership change shifts sorted-view ranks → restage
+            st.pinned = self._stage_pinned(wiki, khi_v, klo_v)
+        else:
+            st.khi, st.klo = prev.khi, prev.klo
+            st.view_rows = prev.view_rows
+            st.pinned = prev.pinned
+        touched = list(info.new_rows) + list(info.removed_rows)
+        if touched:
+            idx = np.asarray(touched, dtype=np.int32)
+            st.ptoks = prev.ptoks.at[jnp.asarray(idx)].set(
+                jnp.asarray(wiki.path_tokens[idx]))
+        else:
+            st.ptoks = prev.ptoks
+        # token table: the packed base (digests + CSR) is immutable; rows
+        # of changed tokens move to copy-on-write overlays, folded back
+        # into the base at the next rebuild.  The engine-level master map
+        # is maintained incrementally (prev's view never reads it).
+        st.tok_hi, st.tok_lo = prev.tok_hi, prev.tok_lo
+        st.tok_offsets, st.tok_rows = prev.tok_offsets, prev.tok_rows
+        tok_patch = dict(prev.tok_patch)
+        tok_extra = dict(prev.tok_extra)
+
+        def _overlay(tok: str) -> None:
+            rows = tuple(self._tok_map.get(tok) or ())
+            i = self._tok_idx.get(tok)
+            if i is not None:
+                tok_patch[i] = rows
+            else:
+                tok_extra[tok] = rows
+
+        for row, path in zip(info.removed_rows, info.removed_paths):
+            for tok in _segment_tokens(path):
+                lst = self._tok_map.get(tok)
+                if lst is not None and row in lst:
+                    lst.remove(row)
+                _overlay(tok)
+        for row, path in zip(info.new_rows, info.new_paths):
+            for tok in _segment_tokens(path):
+                lst = self._tok_map.setdefault(tok, [])
+                bisect.insort(lst, row, key=wiki.paths.__getitem__)
+                _overlay(tok)
+        st.tok_patch = tok_patch
+        st.tok_extra = tok_extra
+        self._st = st          # the swap: one assignment, atomic in python
+        self.last_refresh_kind = "patch"
 
     # ------------------------------------------------------------------
     @classmethod
     def from_store(cls, store: "PathStore | ShardedPathStore",
                    writer: WikiWriter | None = None,
-                   bus: InvalidationBus | None = None) -> "DeviceEngine":
+                   bus: InvalidationBus | None = None, *,
+                   refresh_cadence: int = 1,
+                   refresh_mode: str = "auto") -> "DeviceEngine":
         """Freeze the store into the device layout + host payload table
         (the offline pipeline's snapshot step) — one store pass.  The
         engine stays attached to the store: subsequent writes flow
@@ -597,7 +760,8 @@ class DeviceEngine(QueryEngine):
         from . import tensorstore as TS
         wiki, recs = TS.freeze_with_records(store)
         eng = cls(wiki, recs, depth_budget=store.depth_budget,
-                  store=store, writer=writer, bus=bus)
+                  store=store, writer=writer, bus=bus,
+                  refresh_cadence=refresh_cadence, refresh_mode=refresh_mode)
         # Epoch-consistent rehydration over a durable store: the freeze
         # just read the *current* store, which already includes every
         # committed-but-unapplied dirty path in the WAL journal — record
@@ -612,22 +776,33 @@ class DeviceEngine(QueryEngine):
         return eng
 
     # ------------------------------------------------------------------
-    def refresh(self) -> int:
+    def refresh(self, force: bool = False) -> int:
         """Apply all writes since the last refresh as one ``TensorDelta``.
 
-        Storage cost is O(|dirty paths|) point gets; the array rebuild is
+        Storage cost is O(|dirty paths|) point gets; applying the delta is
         pure in-memory host work with zero store round trips (contrast
-        ``from_store``: a full namespace scan + N gets).  No-op when the
-        bus is clean.  The in-memory rebuild itself is still O(N) per
-        committed refresh (re-sort + token-index rederivation) — at very
-        large N, in-place row patching or a refresh cadence > 1 wave is
-        the next lever (ROADMAP open item)."""
+        ``from_store``: a full namespace scan + N gets).  Small deltas
+        patch the resident snapshot in place (O(|Δ|) — stable row ids,
+        device buffers reused); compaction-triggering ones rebuild.
+        No-op when the bus is clean.
+
+        With ``refresh_cadence=k > 1``, only every k-th dirty refresh
+        request commits (the deferral counter only advances while writes
+        are pending, so idle waves don't consume the cadence); the
+        durable group commit rides the committed refresh, so both
+        visibility and durability arrive within k waves of the admitting
+        wave.  ``force=True`` (snapshot/shutdown drains) commits
+        immediately."""
         if self.writer is not None and self.writer.bus is not None:
             self.writer.bus.drain()
         if not self._dirty:
             return self.epoch
+        self._deferred_waves += 1
+        if not force and self._deferred_waves < self.refresh_cadence:
+            return self.epoch
+        self._deferred_waves = 0
         from . import tensorstore as TS
-        resident = set(self.wiki.paths)
+        resident = self.wiki.row_of
         upserts: list[tuple[str, R.Record]] = []
         unlinks: list[str] = []
         for p in sorted(self._dirty):
@@ -647,12 +822,18 @@ class DeviceEngine(QueryEngine):
             return self.epoch
         delta = TS.TensorDelta(epoch=self.epoch + 1,
                                upserts=upserts, unlinks=unlinks)
-        wiki, recs = TS.apply_delta(self.wiki, self.records, delta)
-        self._install(wiki, recs)
+        prev = self._st
+        wiki, recs, info = TS.apply_delta_ex(
+            self.wiki, self.records, delta, mode=self.refresh_mode)
+        if info.kind == "patch":
+            self._patch_install(prev, wiki, recs, info)
+        else:
+            self._install(wiki, recs)
         self.delta_log.append(delta)
         del self.delta_log[:-self.DELTA_LOG_KEEP]
         self.epoch += 1
         self.stats.record(REFRESH, len(delta))
+        self.stats.record(f"{REFRESH}_{info.kind}", len(delta))
         # durable wave boundary: DEVMARK (journal applied through this
         # epoch) rides the same WAL commit as the wave it closes
         mark = getattr(self.store, "mark_device_epoch", None)
@@ -671,15 +852,21 @@ class DeviceEngine(QueryEngine):
             p <<= 1
         return p
 
-    def _lookup_rows(self, digest_pairs: np.ndarray,
+    def _lookup_rows(self, st: _EpochView, digest_pairs: np.ndarray,
                      table=None) -> np.ndarray:
-        """One batched device lookup: (Q, 2) uint64 pairs → (Q,) row ids."""
+        """One batched device lookup: (Q, 2) uint64 pairs → (Q,) row ids.
+        Main-table lookups (table=None) probe the epoch's pinned VMEM
+        sub-table first, then map sorted-view positions back to stable
+        row ids through ``view_rows``."""
         import jax.numpy as jnp
         from ..kernels.ops import path_lookup
         q = digest_pairs.shape[0]
         if q == 0:
             return np.zeros((0,), dtype=np.int32)
-        khi, klo = table if table is not None else (self._khi, self._klo)
+        if table is None:
+            khi, klo, pinned = st.khi, st.klo, st.pinned
+        else:
+            (khi, klo), pinned = table, None
         qp = self._pad_pow2(q)
         if qp != q:
             # (0, 0) can never collide with an FNV digest of a non-empty
@@ -689,11 +876,17 @@ class DeviceEngine(QueryEngine):
         rows = path_lookup(
             khi, klo,
             jnp.asarray(digest_pairs[:, 0].astype(np.uint32)),
-            jnp.asarray(digest_pairs[:, 1].astype(np.uint32)))
+            jnp.asarray(digest_pairs[:, 1].astype(np.uint32)),
+            pinned=pinned)
         rows = np.asarray(rows)[:q]
-        # clip defensively against the padded key-table tail
-        n_rows = (len(self.records) if table is None
-                  else len(self._tok_offsets) - 1)
+        if table is None:
+            # sorted-view position → row id, clipped against the padded
+            # key-table tail
+            n_view = len(st.view_rows)
+            valid = (rows >= 0) & (rows < n_view)
+            safe = np.clip(rows, 0, max(n_view - 1, 0))
+            return np.where(valid, st.view_rows[safe], -1).astype(np.int32)
+        n_rows = len(st.tok_offsets) - 1
         return np.where(rows >= n_rows, -1, rows)
 
     def _digests(self, paths: list[str]) -> np.ndarray:
@@ -709,9 +902,10 @@ class DeviceEngine(QueryEngine):
     # ------------------------------------------------------------------
     def q1_get(self, paths):
         self.stats.record(Q1, len(paths))
+        st = self._st
         norm = self._norm(paths)
-        rows = self._lookup_rows(self._digests(norm))
-        return [self.records[r] if r >= 0 else None for r in rows]
+        rows = self._lookup_rows(st, self._digests(norm))
+        return [st.records[r] if r >= 0 else None for r in rows]
 
     def q2_ls(self, paths):
         """One batched lookup; children come co-located in the resolved
@@ -720,11 +914,12 @@ class DeviceEngine(QueryEngine):
         traversal in core/tensorstore.py; the engine's record table
         already carries the same lists.)"""
         self.stats.record(Q2, len(paths))
+        st = self._st
         norm = self._norm(paths)
-        rows = self._lookup_rows(self._digests(norm))
+        rows = self._lookup_rows(st, self._digests(norm))
         out = []
         for p, r in zip(norm, rows):
-            rec = self.records[r] if r >= 0 else None
+            rec = st.records[r] if r >= 0 else None
             if rec is None or not isinstance(rec, R.DirRecord):
                 out.append(None)
                 continue
@@ -735,16 +930,18 @@ class DeviceEngine(QueryEngine):
         """The whole batch's ancestor chains flatten into ONE lookup
         launch — step compression applied to the storage layer itself."""
         self.stats.record(Q3, len(paths))
+        st = self._st
         norm = self._norm(paths)
         chains = [list(P.ancestors(p)) + [p] for p in norm]
         flat = [a for chain in chains for a in chain]
-        rows = self._lookup_rows(self._digests(flat))
+        rows = self._lookup_rows(st, self._digests(flat))
         # the flat lookup resolves every level even past a miss (the batch
         # is issued before results are known); the per-path result still
         # truncates at the first miss, matching PathStore.navigate
-        return self._q3_truncate(chains, rows)
+        return self._q3_truncate(st, chains, rows)
 
-    def _q3_truncate(self, chains, rows) -> list[list[R.Record]]:
+    @staticmethod
+    def _q3_truncate(st: _EpochView, chains, rows) -> list[list[R.Record]]:
         out: list[list[R.Record]] = []
         i = 0
         for chain in chains:
@@ -755,7 +952,7 @@ class DeviceEngine(QueryEngine):
                 i += 1
                 if stopped:
                     continue
-                rec = self.records[r] if r >= 0 else None
+                rec = st.records[r] if r >= 0 else None
                 if rec is None:
                     stopped = True
                 else:
@@ -765,13 +962,17 @@ class DeviceEngine(QueryEngine):
 
     def q4_search(self, prefixes, limit=None):
         """One prefix_search launch for the whole prefix batch: every
-        pending prefix is compared against each resident path tile."""
+        pending prefix is compared against each resident path tile.  The
+        scan runs over the row-order token matrix (free slots are zeros,
+        tombstones 255s — neither can match a real prefix), so a patch
+        refresh only re-uploads the touched rows."""
         import jax.numpy as jnp
         from . import tensorstore as TS
         from ..kernels.ops import prefix_search
         self.stats.record(Q4, len(prefixes))
         if not prefixes:
             return []
+        st = self._st
         fixed = [p if p.startswith(P.SEP) else P.SEP + p for p in prefixes]
         L = self._max_path_bytes
         qp = self._pad_pow2(len(fixed), floor=4)
@@ -792,43 +993,53 @@ class DeviceEngine(QueryEngine):
                 pref_mat[i] = TS.pack_path(p, L)
                 lens[i] = blen
         bitmap = np.asarray(prefix_search(
-            self.wiki.lex_tokens, jnp.asarray(pref_mat), jnp.asarray(lens)))
+            st.ptoks, jnp.asarray(pref_mat), jnp.asarray(lens)))
+        n_paths = len(st.paths)
         out: list[list[str]] = []
         for qi in range(len(fixed)):
             if qi in long_idx:
                 seg_pref = fixed[qi].rstrip(P.SEP) or P.ROOT
                 matches = sorted(
-                    p for p in self.wiki.paths
+                    p for p in st.wiki.row_of
                     if p.startswith(fixed[qi])
                     and (P.is_prefix(seg_pref, p) or p == fixed[qi]))
                 out.append(matches if limit is None else matches[:limit])
                 continue
-            hits = np.nonzero(bitmap[:, qi])[0]
-            matches = [self.wiki.paths[self._lex_order[i]] for i in hits]
+            hits = np.nonzero(bitmap[:n_paths, qi])[0]
+            matches = sorted(st.paths[r] for r in hits)
             out.append(matches if limit is None else matches[:limit])
         return out
 
     def q4_contains(self, tokens, limit=None):
         """Keyword routing: the segment-token inverted index as a device
         lookup — token digests through the SAME Pallas path_lookup kernel,
-        then a CSR slice of matching path rows.  Exact segment-token
-        semantics, identical to PathStore.search_contains."""
+        then a CSR slice of matching path rows (or the epoch's
+        copy-on-write overlay for tokens a patch refresh touched).  Exact
+        segment-token semantics, identical to PathStore.search_contains."""
         self.stats.record(Q4C, len(tokens))
         if not tokens:
             return []
-        dig = np.zeros((len(tokens), 2), dtype=np.uint64)
-        for i, t in enumerate(tokens):
-            h = _token_hash(t.lower())
+        st = self._st
+        norm_toks = [t.lower() for t in tokens]
+        dig = np.zeros((len(norm_toks), 2), dtype=np.uint64)
+        for i, t in enumerate(norm_toks):
+            h = _token_hash(t)
             dig[i] = ((h >> 32) & 0xFFFFFFFF, h & 0xFFFFFFFF)
-        rows = self._lookup_rows(dig, table=(self._tok_hi, self._tok_lo))
+        rows = self._lookup_rows(st, dig, table=(st.tok_hi, st.tok_lo))
         out: list[list[str]] = []
-        for r in rows:
-            if r < 0:
-                out.append([])
-                continue
-            lo, hi = self._tok_offsets[r], self._tok_offsets[r + 1]
-            prows = self._tok_rows[lo:hi]
-            matches = [self.wiki.paths[i] for i in prows]
+        for t, r in zip(norm_toks, rows):
+            if r >= 0:
+                over = st.tok_patch.get(int(r))
+                if over is not None:
+                    prows = over
+                else:
+                    lo, hi = st.tok_offsets[r], st.tok_offsets[r + 1]
+                    prows = st.tok_rows[lo:hi]
+            else:
+                # token absent from the packed table — it may have been
+                # introduced by a patch refresh since the last rebuild
+                prows = st.tok_extra.get(t, ())
+            matches = [st.paths[i] for i in prows]
             out.append(matches if limit is None else matches[:limit])
         return out
 

@@ -25,7 +25,7 @@ from . import ref
 from .decode_attention import decode_attention as _decode_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .moe_router import moe_router as _router_pallas
-from .path_lookup import pad_keys, path_lookup as _lookup_pallas
+from .path_lookup import pad_keys, pad_pinned, path_lookup as _lookup_pallas
 from .prefix_search import prefix_search as _prefix_pallas
 from .rmsnorm import rmsnorm as _rmsnorm_pallas
 
@@ -89,18 +89,26 @@ def rmsnorm(x, scale=None, eps: float = 1e-6, block_t: int = 256):
     return ref.rmsnorm_ref(x, scale, eps=eps)
 
 
-def path_lookup(keys_hi, keys_lo, q_hi, q_lo, *, block_q: int = 256):
+def path_lookup(keys_hi, keys_lo, q_hi, q_lo, *, pinned=None,
+                block_q: int = 256):
     """Sorted-table batched GET.  Keys must be pre-padded via pad_keys for
-    the kernel path; the reference accepts any length.  The fallback is
-    jitted here — the batched QueryEngine calls this once per engine
-    round trip, so an eagerly-traced fori_loop would dominate the call."""
+    the kernel path; the reference accepts any length.  ``pinned`` is the
+    optional VMEM hot-set staging triple (hi, lo, sorted-table position) —
+    the kernel probes it before touching the HBM table; the reference
+    oracle applies the same short-circuit.  The fallback is jitted here —
+    the batched QueryEngine calls this once per engine round trip, so an
+    eagerly-traced fori_loop would dominate the call."""
     if _use_pallas() and keys_hi.shape[0] % 128 == 0:
-        return _lookup_pallas(keys_hi, keys_lo, q_hi, q_lo,
+        return _lookup_pallas(keys_hi, keys_lo, q_hi, q_lo, pinned=pinned,
                               block_q=block_q, interpret=not _on_tpu())
+    if pinned is not None:
+        return _path_lookup_pinned_ref_jit(keys_hi, keys_lo, q_hi, q_lo,
+                                           *pinned)
     return _path_lookup_ref_jit(keys_hi, keys_lo, q_hi, q_lo)
 
 
 _path_lookup_ref_jit = jax.jit(ref.path_lookup_ref)
+_path_lookup_pinned_ref_jit = jax.jit(ref.path_lookup_pinned_ref)
 
 
 def prefix_search(tokens, prefixes, prefix_lens, *, block_n: int = 1024):
@@ -123,4 +131,4 @@ def _prefix_ref_batched(tokens, prefixes, prefix_lens):
 
 
 __all__ = ["attention", "decode_attention", "moe_router", "rmsnorm",
-           "path_lookup", "prefix_search", "pad_keys"]
+           "path_lookup", "prefix_search", "pad_keys", "pad_pinned"]

@@ -19,6 +19,15 @@ This replaces the per-query binary search (log₂N dependent HBM loads,
 latency-bound) with one VMEM-resident compare + exactly one dynamic slice
 per query — the O(1) storage-round-trip contract of §IV, realized as
 "O(1) HBM touches per query".
+
+  level 0 (pinned): the engine stages the wiki's pinned hot set ("/" +
+    every dimension — the paper's L1 cache tier) as a VMEM-resident
+    sub-table of (hi, lo, sorted-table position) triples.  Every query is
+    broadcast-compared against it *first*; a pinned hit emits its
+    position directly and skips the HBM tile slice entirely, so the hot
+    rows that dominate navigation traffic (every chain starts at "/" and
+    a dimension) cost zero HBM touches.  ``pinned=None`` degrades to a
+    sentinel table that can never hit.
 """
 from __future__ import annotations
 
@@ -33,14 +42,29 @@ from jax.experimental.pallas import tpu as pltpu
 TILE = 128
 
 
-def _lookup_kernel(fhi_ref, flo_ref, khi_ref, klo_ref, qhi_ref, qlo_ref,
+#: pinned sub-table allocation granule (lane-friendly; tiny either way)
+PIN_TILE = 8
+
+
+def _lookup_kernel(phi_ref, plo_ref, ppos_ref, fhi_ref, flo_ref,
+                   khi_ref, klo_ref, qhi_ref, qlo_ref,
                    out_ref, *, n_keys: int, n_fences: int, block_q: int):
-    """Refs: fences f{hi,lo} (F,) VMEM; full keys k{hi,lo} (N,) ANY/HBM;
-    queries q{hi,lo} (block_q,) VMEM; out (block_q,) int32."""
+    """Refs: pinned p{hi,lo,pos} (P,) VMEM; fences f{hi,lo} (F,) VMEM;
+    full keys k{hi,lo} (N,) ANY/HBM; queries q{hi,lo} (block_q,) VMEM;
+    out (block_q,) int32."""
     qhi = qhi_ref[...]
     qlo = qlo_ref[...]
     fhi = fhi_ref[...]
     flo = flo_ref[...]
+    # level 0: broadcast-compare against the VMEM pinned hot set.  Pinned
+    # keys are unique, so the masked row-sum selects the hit position.
+    phi = phi_ref[...]
+    plo = plo_ref[...]
+    ppos = ppos_ref[...]
+    pin_eq = (phi[None, :] == qhi[:, None]) & (plo[None, :] == qlo[:, None])
+    pin_hit = jnp.any(pin_eq, axis=1)                      # (block_q,)
+    pin_pos = jnp.sum(jnp.where(pin_eq, ppos[None, :], 0),
+                      axis=1).astype(jnp.int32)
     # level 1: tile id = (# fences <= q) - 1, lexicographic on uint32 pairs
     le = (fhi[None, :] < qhi[:, None]) | (
         (fhi[None, :] == qhi[:, None]) & (flo[None, :] <= qlo[:, None]))
@@ -48,16 +72,24 @@ def _lookup_kernel(fhi_ref, flo_ref, khi_ref, klo_ref, qhi_ref, qlo_ref,
     tile_idx = jnp.clip(tile_idx, 0, n_fences - 1)
 
     # level 2: one dynamic slice per query (serial fori over the block —
-    # each iteration is a TILE-wide vector compare, fully in-lane)
+    # each iteration is a TILE-wide vector compare, fully in-lane); a
+    # pinned hit skips the HBM slice entirely
     def body(i, _):
-        start = tile_idx[i] * TILE
-        start = jnp.minimum(start, n_keys - TILE)
-        khi = khi_ref[pl.ds(start, TILE)]
-        klo = klo_ref[pl.ds(start, TILE)]
-        hit = (khi == qhi[i]) & (klo == qlo[i])
-        pos = jnp.arange(TILE, dtype=jnp.int32)
-        row = jnp.min(jnp.where(hit, start + pos, jnp.int32(2**31 - 1)))
-        out_ref[i] = jnp.where(jnp.any(hit), row, -1)
+        @pl.when(pin_hit[i])
+        def _pinned():
+            out_ref[i] = pin_pos[i]
+
+        @pl.when(~pin_hit[i])
+        def _hbm():
+            start = tile_idx[i] * TILE
+            start = jnp.minimum(start, n_keys - TILE)
+            khi = khi_ref[pl.ds(start, TILE)]
+            klo = klo_ref[pl.ds(start, TILE)]
+            hit = (khi == qhi[i]) & (klo == qlo[i])
+            pos = jnp.arange(TILE, dtype=jnp.int32)
+            row = jnp.min(jnp.where(hit, start + pos, jnp.int32(2**31 - 1)))
+            out_ref[i] = jnp.where(jnp.any(hit), row, -1)
+
         return 0
 
     jax.lax.fori_loop(0, block_q, body, 0)
@@ -66,10 +98,16 @@ def _lookup_kernel(fhi_ref, flo_ref, khi_ref, klo_ref, qhi_ref, qlo_ref,
 @functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
 def path_lookup(keys_hi: jax.Array, keys_lo: jax.Array,
                 q_hi: jax.Array, q_lo: jax.Array, *,
+                pinned: tuple[jax.Array, jax.Array, jax.Array] | None = None,
                 block_q: int = 256, interpret: bool = True) -> jax.Array:
     """keys_{hi,lo}: (N,) uint32 sorted pairs; q_{hi,lo}: (Q,) uint32.
     Returns (Q,) int32 row ids, −1 on miss.  N is padded to a TILE multiple
-    with max-key sentinels by the caller (ops.pad_keys)."""
+    with max-key sentinels by the caller (ops.pad_keys).
+
+    ``pinned`` is the optional VMEM hot-set staging: (pin_hi, pin_lo,
+    pin_pos) where pin_pos[j] is the *sorted-table position* of the pinned
+    key pair — the value the HBM search would have produced.  Free slots
+    hold 0xFFFFFFFF key sentinels (match-proof; see pad_keys)."""
     n = keys_hi.shape[0]
     assert n % TILE == 0, f"key table must be padded to {TILE}: {n}"
     Q = q_hi.shape[0]
@@ -82,6 +120,13 @@ def path_lookup(keys_hi: jax.Array, keys_lo: jax.Array,
     fences_hi = keys_hi[::TILE]
     fences_lo = keys_lo[::TILE]
     n_fences = fences_hi.shape[0]
+    if pinned is None:
+        pin_hi = jnp.full((PIN_TILE,), 0xFFFFFFFF, jnp.uint32)
+        pin_lo = pin_hi
+        pin_pos = jnp.zeros((PIN_TILE,), jnp.int32)
+    else:
+        pin_hi, pin_lo, pin_pos = pinned
+    n_pin = pin_hi.shape[0]
 
     kernel = functools.partial(
         _lookup_kernel, n_keys=n, n_fences=n_fences, block_q=bq)
@@ -89,6 +134,9 @@ def path_lookup(keys_hi: jax.Array, keys_lo: jax.Array,
         kernel,
         grid=(Qp // bq,),
         in_specs=[
+            pl.BlockSpec((n_pin,), lambda qb: (0,)),
+            pl.BlockSpec((n_pin,), lambda qb: (0,)),
+            pl.BlockSpec((n_pin,), lambda qb: (0,)),
             pl.BlockSpec((n_fences,), lambda qb: (0,)),
             pl.BlockSpec((n_fences,), lambda qb: (0,)),
             pl.BlockSpec(memory_space=pl.ANY),
@@ -99,8 +147,23 @@ def path_lookup(keys_hi: jax.Array, keys_lo: jax.Array,
         out_specs=pl.BlockSpec((bq,), lambda qb: (qb,)),
         out_shape=jax.ShapeDtypeStruct((Qp,), jnp.int32),
         interpret=interpret,
-    )(fences_hi, fences_lo, keys_hi, keys_lo, q_hi, q_lo)
+    )(pin_hi, pin_lo, pin_pos, fences_hi, fences_lo,
+      keys_hi, keys_lo, q_hi, q_lo)
     return out[:Q]
+
+
+def pad_pinned(pin_hi: np.ndarray, pin_lo: np.ndarray, pin_pos: np.ndarray
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad a pinned staging triple to the PIN_TILE granule with
+    0xFFFFFFFF key sentinels (position 0 — never selected)."""
+    n = pin_hi.shape[0]
+    pad = (-n) % PIN_TILE if n else PIN_TILE
+    if pad == 0:
+        return pin_hi, pin_lo, pin_pos
+    fill = np.full((pad,), 0xFFFFFFFF, dtype=np.uint32)
+    return (np.concatenate([pin_hi, fill]),
+            np.concatenate([pin_lo, fill]),
+            np.concatenate([pin_pos, np.zeros((pad,), np.int32)]))
 
 
 def pad_keys(keys_hi: np.ndarray, keys_lo: np.ndarray

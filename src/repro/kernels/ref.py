@@ -191,6 +191,22 @@ def path_lookup_ref(keys_hi: jax.Array, keys_lo: jax.Array,
     return jnp.where(hit, idx, -1)
 
 
+def path_lookup_pinned_ref(keys_hi: jax.Array, keys_lo: jax.Array,
+                           q_hi: jax.Array, q_lo: jax.Array,
+                           pin_hi: jax.Array, pin_lo: jax.Array,
+                           pin_pos: jax.Array) -> jax.Array:
+    """Oracle for the pinned-probe kernel path: a query matching the
+    pinned sub-table resolves to its staged sorted-table position; the
+    rest fall through to the binary search.  When the staging is
+    consistent (pin_pos[j] == position of (pin_hi, pin_lo)[j] in the
+    sorted table), this equals plain ``path_lookup_ref``."""
+    base = path_lookup_ref(keys_hi, keys_lo, q_hi, q_lo)
+    eq = (pin_hi[None, :] == q_hi[:, None]) & (pin_lo[None, :] == q_lo[:, None])
+    hit = jnp.any(eq, axis=1)
+    pos = jnp.sum(jnp.where(eq, pin_pos[None, :], 0), axis=1).astype(jnp.int32)
+    return jnp.where(hit, pos, base)
+
+
 def prefix_search_ref(tokens: jax.Array, prefix: jax.Array,
                       prefix_len: jax.Array) -> jax.Array:
     """Bitmap of rows whose packed path starts with ``prefix`` (segment-

@@ -232,9 +232,11 @@ class ServingEngine:
         while self.pending_writes():
             self._enqueue_write_batch()
             self.planner.flush()
-            self.engine.refresh()
+            self.engine.refresh(force=True)
         self.planner.flush()
-        self.engine.refresh()
+        # force=True overrides a device refresh cadence > 1: the snapshot
+        # must observe every drained write, not eventual k-wave visibility
+        self.engine.refresh(force=True)
         store = getattr(self.engine, "store", None)
         if store is not None and hasattr(store, "flush"):
             store.flush()

@@ -635,3 +635,120 @@ def test_per_item_write_failures_never_poison_the_wave():
     # all futures resolved — nothing dangles
     for f in (f_deep, f_ok, f_upd_missing, f_bad_unlink, f_ok_unlink):
         assert f.done
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 6: double-buffered epoch swap + refresh cadence
+# ---------------------------------------------------------------------------
+def test_epoch_view_unaffected_by_patch_swap():
+    """Double-buffer contract: a reader that captured epoch e's view keeps
+    answering from epoch e, bit-for-bit, after e+1 is patch-installed —
+    the swap is one reference assignment and never writes e's buffers."""
+    store = _seed_store()
+    dev = DeviceEngine.from_store(store)
+    st_e = dev.epoch_view()
+    probe = ["/", "/d0", "/d0/e0", "/d1/e2", "/missing"]
+    before_q1 = dev.q1_get(probe)
+    before_search = dev.q4_search(["/d0", "/d1"])
+    before_tok = dev.q4_contains(["e0", "d1", "e2"])
+    pl = BatchPlanner(dev)
+    pl.admit("/d0/e0", R.FileRecord(name="e0", text="overwritten"))
+    pl.admit("/d0/extra", R.FileRecord(name="extra", text="new"))
+    pl.admit("/d9", R.DirRecord(name="d9", summary="new dimension"))
+    pl.unlink("/d1/e2")
+    pl.flush()
+    dev.refresh()
+    assert dev.last_refresh_kind == "patch"
+    st_next = dev.epoch_view()
+    assert st_next is not st_e
+    # epoch e+1 sees the writes (including the pinned-set change: /d9 is a
+    # new depth-1 row, so the VMEM hot-set staging was rebuilt)
+    assert dev.q1_get(["/d0/e0"])[0].text == "overwritten"
+    assert dev.q1_get(["/d9"])[0].summary == "new dimension"
+    assert dev.q1_get(["/d1/e2"]) == [None]
+    assert "/d0/extra" in dev.q4_search(["/d0"])[0]
+    # ...while the captured epoch-e view still answers exactly as before
+    dev._st = st_e
+    try:
+        assert dev.q1_get(probe) == before_q1
+        assert dev.q4_search(["/d0", "/d1"]) == before_search
+        assert dev.q4_contains(["e0", "d1", "e2"]) == before_tok
+    finally:
+        dev._st = st_next
+
+
+def test_refresh_cadence_batches_visibility():
+    """refresh_cadence=3: writes stay invisible through the first two
+    refresh requests and commit on the third — ONE epoch bump for the
+    whole batch (staleness Δ = cadence waves); force=True drains now."""
+    store = _seed_store()
+    dev = DeviceEngine.from_store(store, refresh_cadence=3)
+    pl = BatchPlanner(dev)
+    e0 = dev.epoch
+    pl.admit("/d0/cad", R.FileRecord(name="cad", text="v"))
+    pl.flush()
+    assert dev.refresh() == e0
+    assert dev.q1_get(["/d0/cad"]) == [None]
+    assert dev.refresh() == e0
+    assert dev.q1_get(["/d0/cad"]) == [None]
+    assert dev.refresh() == e0 + 1              # third wave commits
+    assert dev.q1_get(["/d0/cad"])[0].text == "v"
+    # a clean refresh stays a no-op and doesn't consume the cadence
+    assert dev.refresh() == e0 + 1
+    # force=True overrides the cadence (snapshot/drain path)
+    pl.admit("/d0/cad2", R.FileRecord(name="cad2", text="w"))
+    pl.flush()
+    assert dev.refresh(force=True) == e0 + 2
+    assert dev.q1_get(["/d0/cad2"])[0].text == "w"
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 4))
+def test_refresh_cadence_staleness_bound(cadence):
+    """Property: with refresh_cadence=k, a wave's writes become visible at
+    exactly the k-th subsequent refresh request — never earlier, never
+    later (the Δ = cadence staleness bound)."""
+    store = _seed_store()
+    dev = DeviceEngine.from_store(store, refresh_cadence=cadence)
+    pl = BatchPlanner(dev)
+    pl.admit("/d0/w", R.FileRecord(name="w", text="x"))
+    pl.flush()
+    for lag in range(1, cadence + 1):
+        dev.refresh()
+        visible = dev.q1_get(["/d0/w"])[0] is not None
+        assert visible == (lag == cadence)
+
+
+def test_patch_refresh_parity_with_rebuild_engine():
+    """The same write mix answered by a patch-mode engine and a
+    rebuild-mode engine is indistinguishable across every Q1–Q4 batch."""
+    store_a = _seed_store()
+    store_b = _seed_store()
+    # fixed clocks so record timestamps can't differ between the runs
+    dev_p = DeviceEngine.from_store(
+        store_a, writer=WikiWriter(store_a, clock=lambda: 1.0,
+                                   bus=InvalidationBus()),
+        refresh_mode="patch")
+    dev_r = DeviceEngine.from_store(
+        store_b, writer=WikiWriter(store_b, clock=lambda: 1.0,
+                                   bus=InvalidationBus()),
+        refresh_mode="rebuild")
+    for dev in (dev_p, dev_r):
+        pl = BatchPlanner(dev)
+        pl.admit("/d0/sub", R.DirRecord(name="sub"))
+        pl.admit("/d0/sub/leaf", R.FileRecord(name="leaf", text="deep"))
+        pl.update("/d0/e0", lambda r: R.FileRecord(
+            name=r.name, text="rewritten", meta=r.meta))
+        pl.unlink("/d1/e1")
+        pl.flush()
+        dev.refresh()
+    assert dev_p.last_refresh_kind == "patch"
+    assert dev_r.last_refresh_kind == "rebuild"
+    paths = store_a.all_paths() + ["/d1/e1", "/nope"]
+    assert dev_p.q1_get(paths) == dev_r.q1_get(paths)
+    assert dev_p.q2_ls(paths) == dev_r.q2_ls(paths)
+    assert dev_p.q3_navigate(paths) == dev_r.q3_navigate(paths)
+    assert dev_p.q4_search(["/", "/d0", "/d0/sub"]) == dev_r.q4_search(
+        ["/", "/d0", "/d0/sub"])
+    assert dev_p.q4_contains(["leaf", "sub", "e1", "e0"]) == dev_r.q4_contains(
+        ["leaf", "sub", "e1", "e0"])

@@ -145,3 +145,38 @@ def test_prefix_search_sweep(N, L, Q, bn):
                                jnp.asarray(plens[i])) for i in range(Q)],
         axis=1)
     assert jnp.all(got == want)
+
+
+@pytest.mark.parametrize("N,Q,n_pin,bq", [(1000, 301, 5, 128),
+                                          (130, 40, 1, 32),
+                                          (5000, 64, 33, 64),
+                                          (512, 96, 0, 32)])
+def test_path_lookup_pinned_parity(N, Q, n_pin, bq):
+    """Level-0 VMEM pinned probe: kernel ≡ pinned oracle ≡ plain binary
+    search (a consistent staging must never change any answer — pinned
+    hits short-circuit, everything else falls through to HBM)."""
+    from repro.kernels.path_lookup import pad_pinned
+    rs = np.random.RandomState(N + n_pin)
+    keys64 = np.unique(rs.randint(0, 2**63, size=N).astype(np.uint64))
+    khi = (keys64 >> np.uint64(32)).astype(np.uint32)
+    klo = (keys64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    khi_p, klo_p = pad_keys(khi, klo)
+    # pin a deterministic subset; staged position == sorted-table rank
+    pin_rows = rs.choice(len(keys64), size=min(n_pin, len(keys64)),
+                         replace=False).astype(np.int32)
+    pinned = pad_pinned(khi[pin_rows], klo[pin_rows], pin_rows)
+    # queries: pinned hits, unpinned hits, misses
+    qidx = rs.randint(0, len(keys64), size=Q)
+    qhi = np.concatenate([khi[qidx], khi[pin_rows], np.array([1, 2], np.uint32)])
+    qlo = np.concatenate([klo[qidx], klo[pin_rows], np.array([3, 4], np.uint32)])
+    got = path_lookup(jnp.asarray(khi_p), jnp.asarray(klo_p),
+                      jnp.asarray(qhi), jnp.asarray(qlo),
+                      pinned=tuple(jnp.asarray(a) for a in pinned),
+                      block_q=bq)
+    oracle = ref.path_lookup_pinned_ref(
+        jnp.asarray(khi), jnp.asarray(klo), jnp.asarray(qhi),
+        jnp.asarray(qlo), *(jnp.asarray(a) for a in pinned))
+    plain = ref.path_lookup_ref(jnp.asarray(khi), jnp.asarray(klo),
+                                jnp.asarray(qhi), jnp.asarray(qlo))
+    assert jnp.all(got == oracle)
+    assert jnp.all(got == plain)

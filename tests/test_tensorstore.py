@@ -111,7 +111,10 @@ def test_apply_delta_matches_refreeze(paths, mutations):
             unlinks.append(p)
             upserts = [(q, r) for q, r in upserts if q != p]
     delta = TS.TensorDelta(epoch=1, upserts=upserts, unlinks=unlinks)
-    got_wiki, got_recs = TS.apply_delta(wiki, recs, delta)
+    # mode="rebuild" is the byte-identical path (row ids re-rank exactly
+    # like a fresh freeze); the in-place patch path is logically
+    # equivalent but keeps stable row ids — tested separately below
+    got_wiki, got_recs = TS.apply_delta(wiki, recs, delta, mode="rebuild")
     want_wiki, want_recs = TS.freeze_with_records(ps)
     assert got_wiki.paths == want_wiki.paths
     assert got_recs == want_recs
@@ -126,3 +129,176 @@ def test_apply_delta_matches_refreeze(paths, mutations):
     assert np.array_equal(np.asarray(got_wiki.lex_tokens),
                           np.asarray(want_wiki.lex_tokens))
     assert got_wiki.n_pinned == want_wiki.n_pinned
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 6: in-place patch refresh ≡ full rebuild (logical equivalence)
+# ---------------------------------------------------------------------------
+def _linked_store(norm):
+    """Store whose DirRecords actually advertise their children, so the
+    children CSR / overlay paths carry real content."""
+    kids: dict[str, set] = {}
+    for p in norm:
+        kids.setdefault(P.parent(p), set()).add(P.basename(p))
+    ps = PathStore(DictKV())
+    ps.put_record("/", R.DirRecord(
+        name="", sub_dirs=sorted(P.basename(d) for d in kids)))
+    for d in sorted(kids):
+        ps.put_record(d, R.DirRecord(name=P.basename(d),
+                                     files=sorted(kids[d])))
+    for p in norm:
+        ps.put_record(p, R.FileRecord(name=P.basename(p), text="t"))
+    return ps, kids
+
+
+def _apply_linked_mutations(ps, kids, live, mutations):
+    """Mutate the linked store + build the matching TensorDelta rows
+    (parent records ride along, like WikiWriter admissions would)."""
+    ups: dict[str, object] = {}
+    unlinks: list[str] = []
+
+    def _upsert_parent(dim):
+        rec = R.DirRecord(name=P.basename(dim), files=sorted(kids[dim]))
+        ps.put_record(dim, rec)
+        ups[dim] = rec
+
+    def _upsert_root():
+        rec = R.DirRecord(name="", sub_dirs=sorted(
+            P.basename(d) for d in kids if kids[d]))
+        ps.put_record("/", rec)
+        ups["/"] = rec
+
+    for kind, a, b in mutations:
+        if kind == "append":
+            p = P.normalize(f"/{a}/x_{b}")
+            dim = P.parent(p)
+            if dim not in kids or not kids[dim]:
+                kids.setdefault(dim, set())
+                _upsert_root()
+            kids[dim].add(P.basename(p))
+            _upsert_parent(dim)
+            rec = R.FileRecord(name=P.basename(p), text="new")
+            ps.put_record(p, rec)
+            ups[p] = rec
+            if p not in live:
+                live.append(p)
+            unlinks = [q for q in unlinks if q != p]
+        elif kind == "overwrite" and live:
+            p = live[len(a) % len(live)]
+            rec = R.FileRecord(name=P.basename(p), text=f"over_{b}")
+            ps.put_record(p, rec)
+            ups[p] = rec
+        elif kind == "unlink" and len(live) > 1:
+            p = live.pop(len(b) % len(live))
+            dim = P.parent(p)
+            kids[dim].discard(P.basename(p))
+            ps.delete_record(p)
+            _upsert_parent(dim)
+            unlinks.append(p)
+            ups.pop(p, None)
+    return list(ups.items()), unlinks
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sets(st.builds(lambda a, b: f"/{a}/{b}", seg, seg),
+               min_size=2, max_size=16),
+       st.lists(st.tuples(st.sampled_from(["append", "overwrite", "unlink"]),
+                          seg, seg),
+                min_size=1, max_size=10))
+def test_patch_matches_rebuild_logical(paths, mutations):
+    norm = sorted({P.normalize(p) for p in paths})
+    ps, kids = _linked_store(norm)
+    wiki, recs = TS.freeze_with_records(ps)
+    upserts, unlinks = _apply_linked_mutations(ps, kids, list(norm), mutations)
+    delta = TS.TensorDelta(epoch=1, upserts=upserts, unlinks=unlinks)
+    got_wiki, got_recs, info = TS.apply_delta_ex(wiki, recs, delta)
+    want_wiki, want_recs = TS.freeze_with_records(ps)
+    assert TS.logical_state(got_wiki, got_recs) == \
+        TS.logical_state(want_wiki, want_recs), info
+    # the query helpers run over the patched views too
+    live_paths = sorted(got_wiki.row_of)
+    rows = TS.batched_get(got_wiki, live_paths)
+    assert all(got_wiki.paths[r] == p for r, p in zip(rows, live_paths))
+    assert TS.batched_get(got_wiki, ["/definitely/not_here"])[0] == -1
+    for probe in [p for p in live_paths if P.depth(p) >= 2][:3]:
+        assert sorted(TS.search_prefix(got_wiki, P.parent(probe))) == \
+            sorted(ps.search(P.parent(probe)))
+
+
+def test_small_delta_patches_in_place():
+    norm = [f"/d{i}/f{j}" for i in range(4) for j in range(8)]
+    ps, kids = _linked_store(norm)
+    wiki, recs = TS.freeze_with_records(ps)
+    rows_before = dict(wiki.row_of)
+    upserts, unlinks = _apply_linked_mutations(
+        ps, kids, list(norm),
+        [("append", "d1", "aa"), ("overwrite", "x", "y"),
+         ("unlink", "q", "zz")])
+    delta = TS.TensorDelta(epoch=1, upserts=upserts, unlinks=unlinks)
+    got, recs2, info = TS.apply_delta_ex(wiki, recs, delta, mode="patch")
+    assert info.kind == "patch" and got.refresh_kind == "patch"
+    assert got.n_dead == len(unlinks)
+    # stable row ids: every surviving path keeps its slot
+    for p, r in got.row_of.items():
+        if p in rows_before:
+            assert rows_before[p] == r
+    # appended rows land in the slack region, capacity untouched
+    assert got.cap == wiki.cap and got.n_rows == len(rows_before) + 1
+    want_wiki, want_recs = TS.freeze_with_records(ps)
+    assert TS.logical_state(got, recs2) == \
+        TS.logical_state(want_wiki, want_recs)
+    # ls through the children overlay sees the appended file
+    d1 = int(TS.batched_get(got, ["/d1"])[0])
+    kid_paths = {got.paths[r] for r in TS.ls_rows(got, d1)}
+    assert kid_paths == set(ps.search("/d1")) - {"/d1"}
+
+
+def test_unlink_heavy_delta_compacts():
+    norm = [f"/d0/f{j}" for j in range(12)]
+    ps, kids = _linked_store(norm)
+    wiki, recs = TS.freeze_with_records(ps)
+    muts = [("unlink", "a", f"{'b' * (j % 7)}") for j in range(8)]
+    upserts, unlinks = _apply_linked_mutations(ps, kids, list(norm), muts)
+    delta = TS.TensorDelta(epoch=1, upserts=upserts, unlinks=unlinks)
+    got, recs2, info = TS.apply_delta_ex(wiki, recs, delta)
+    assert info.kind == "rebuild" and "tombstone" in info.reason
+    assert got.n_dead == 0 and sorted(got.paths) == sorted(ps.all_paths())
+
+
+def test_slack_exhaustion_compacts():
+    norm = [f"/d0/f{j}" for j in range(4)]
+    ps, kids = _linked_store(norm)
+    wiki, recs = TS.freeze_with_records(ps)
+    seen = set()
+    epoch = 0
+    for batch in range(24):
+        muts = [("append", "d0", f"g{batch}_{i}") for i in range(8)]
+        upserts, unlinks = _apply_linked_mutations(ps, kids, list(norm), muts)
+        epoch += 1
+        delta = TS.TensorDelta(epoch=epoch, upserts=upserts, unlinks=unlinks)
+        wiki, recs, info = TS.apply_delta_ex(wiki, recs, delta)
+        seen.add(info.kind)
+        if info.kind == "rebuild":
+            assert "slack" in info.reason or "delta too large" in info.reason
+            break
+    assert seen == {"patch", "rebuild"}
+    want_wiki, want_recs = TS.freeze_with_records(ps)
+    assert TS.logical_state(wiki, recs) == \
+        TS.logical_state(want_wiki, want_recs)
+
+
+def test_patch_updates_pinned_count():
+    norm = [f"/d{i}/f0" for i in range(3)]
+    ps, kids = _linked_store(norm)
+    wiki, recs = TS.freeze_with_records(ps)
+    n0 = wiki.n_pinned
+    upserts, unlinks = _apply_linked_mutations(
+        ps, kids, list(norm), [("append", "newdim", "f")])
+    delta = TS.TensorDelta(epoch=1, upserts=upserts, unlinks=unlinks)
+    got, recs2, info = TS.apply_delta_ex(wiki, recs, delta, mode="patch")
+    assert info.kind == "patch" and info.pinned_changed
+    assert got.n_pinned == n0 + 1           # "/newdim" joined the hot set
+    want_wiki, _ = TS.freeze_with_records(ps)
+    assert got.n_pinned == want_wiki.n_pinned
+    assert sorted(got.paths[r] for r in got.pinned_rows()) == \
+        sorted(p for p in ps.all_paths() if P.depth(p) <= 1)
