@@ -15,14 +15,24 @@ so the comparison isolates the storage model exactly as §VI-B argues.
 The amortization section reports the engines' *batched* Q1/Q4 (one
 engine call for 256 lookups / a whole prefix batch) — the serving-tier
 execution shape (core/engine.py).
+
+The ``wikikv_durable_cold`` section (ISSUE 7) measures the leveled
+durable tier with the memtable dropped — every lookup hits segment
+files — comparing Q1 hit/miss p50 with per-segment bloom filters and
+the shared block cache ON (defaults) vs OFF (``bloom_bits=0``,
+``block_cache_bytes=0``, the PR-3 read path) over a tree holding at
+least 3 levels and 8 segments.
 """
 from __future__ import annotations
 
 import random
+import shutil
+import tempfile
 
 from common import build_wiki, emit, timeit_median
 
 from repro.core import paths as P
+from repro.core import records as R
 from repro.core.backends import ALL_BACKENDS
 
 
@@ -35,6 +45,102 @@ def collect_items(pipe):
         if rec is not None:
             items.append((path, rec))
     return items
+
+
+MIN_LEVELS = 3        # acceptance shape for the cold-store comparison
+MIN_SEGMENTS = 8
+
+
+def _build_cold_store(items, root: str, bloom_bits: int,
+                      block_cache_bytes: int):
+    """Ingest ``items`` into a single-shard leveled store, spilling every
+    few records, and top up with filler spills until the tree holds at
+    least MIN_LEVELS levels / MIN_SEGMENTS segments; then force the
+    memtable out so every read is served from segment files."""
+    from repro.storage import open_durable_store
+    store = open_durable_store(root, n_shards=1, memtable_limit=32,
+                               sync="none", level_ratio=4,
+                               bloom_bits=bloom_bits,
+                               block_cache_bytes=block_cache_bytes)
+    for i, (p, rec) in enumerate(items):
+        store.put_record(p, rec)
+        if i % 8 == 7:
+            store.flush()
+    eng = store.engine
+    filler = 0
+    # the size-ratio cascade leaves (spills mod ratio) residuals per
+    # level, so one more spill per iteration always reaches the target
+    # shape within one full cycle (< ratio^MIN_LEVELS extra spills)
+    while (len(eng.level_counts()) < MIN_LEVELS
+           or sum(eng.level_counts().values()) < MIN_SEGMENTS):
+        for _ in range(8):
+            store.put_record(f"/fill/f{filler}",
+                             R.FileRecord(name=f"f{filler}", text="pad"))
+            filler += 1
+        store.flush()
+        if filler > 4096:
+            raise RuntimeError(f"cold store never reached shape: "
+                               f"{eng.level_counts()}")
+    eng.spill()                      # drop the memtable: truly cold reads
+    assert not eng._mem
+    return store
+
+
+def durable_cold_rows(items, rng, n_iters: int, warmup: int):
+    """Q1 hit/miss p50 over the cold leveled store, filters+cache on vs
+    off; the ISSUE 7 acceptance row is the miss speedup (>= 5x).
+
+    Measured at the engine key level (the ``d:<digest>`` point lookup a
+    Q1 bottoms out in) so the comparison isolates the storage tier —
+    path normalization and digest hashing cost the same in both
+    variants and would only dilute the ratio."""
+    from repro.core.store import PathStore as PS
+    paths = [p for p, _ in items]
+    hits = [PS.data_key(rng.choice(paths)) for _ in range(100)]
+    misses = [PS.data_key(f"/zz/absent_{i * 131}") for i in range(100)]
+    rows, p50 = [], {}
+    shape = None
+    for label, bloom_bits, cache_bytes in (("", None, None),
+                                           ("_nofilter", 0, 0)):
+        root = tempfile.mkdtemp(prefix="wikikv_cold_")
+        try:
+            store = _build_cold_store(items, root, bloom_bits, cache_bytes)
+            eng = store.engine
+            levels = eng.level_counts()
+            shape = shape or (len(levels), sum(levels.values()))
+
+            # the op under test is ~10us, so iterations are nearly free:
+            # floor the count and take the best of 3 medians to shrug off
+            # CPU-frequency dips that would swamp a single smoke median
+            n = max(n_iters, 300)
+
+            def best_median(fn):
+                return min(timeit_median(fn, n, max(warmup, 50))
+                           for _ in range(3))
+
+            it = iter(range(10**9))
+            q1h = best_median(lambda: eng.get(hits[next(it) % 100]))
+            it = iter(range(10**9))
+            q1m = best_median(lambda: eng.get(misses[next(it) % 100]))
+            p50[f"hit{label}"], p50[f"miss{label}"] = q1h, q1m
+            counts = eng.op_counts()
+            derived = (f"us;levels={len(levels)};"
+                       f"segments={sum(levels.values())};"
+                       f"bloom_neg={counts.get('bloom_neg', 0)};"
+                       f"cache_hit={counts.get('cache_hit', 0)}")
+            rows.append((f"table2_wikikv_durable_cold{label}_q1_hit",
+                         round(q1h * 1000, 2), derived))
+            rows.append((f"table2_wikikv_durable_cold{label}_q1_miss",
+                         round(q1m * 1000, 2), derived))
+            store.close()
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+    rows.append(("table2_wikikv_durable_cold_miss_speedup",
+                 round(p50["miss_nofilter"] / p50["miss"], 2),
+                 f"x;accept>=5;levels={shape[0]};segments={shape[1]}"))
+    rows.append(("table2_wikikv_durable_cold_hit_speedup",
+                 round(p50["hit_nofilter"] / p50["hit"], 2), "x"))
+    return rows
 
 
 def run(n_iters: int = 1000, warmup: int = 200, seed: int = 0):
@@ -95,6 +201,7 @@ def run(n_iters: int = 1000, warmup: int = 200, seed: int = 0):
                      be.engine.stats.total_calls(),
                      f"count;ops={be.engine.stats.total_ops()}"))
         be.close()
+    rows.extend(durable_cold_rows(items, rng, n_iters, warmup))
     rows.append(("table2_wiki_kv_pairs", len(items), "count"))
     emit(rows, header="Table II: per-operator median latency by backend")
     return rows

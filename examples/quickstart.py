@@ -34,7 +34,10 @@ def main():
                     help="build on the durable WAL+SSTable tier rooted at "
                          "DIR (must be a fresh/empty directory — the demo "
                          "ingests from scratch), then demonstrate "
-                         "close → reopen → navigate")
+                         "close → reopen → navigate: reopening replays the "
+                         "WAL tail into the memtable and serves committed "
+                         "records straight from the leveled segments, no "
+                         "re-ingestion")
     args = ap.parse_args()
     print("=== 1. generate corpus (AUTHTRACE protocol) ===")
     docs, questions = generate_authtrace(

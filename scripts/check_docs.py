@@ -1,0 +1,94 @@
+"""Docs consistency gate for CI (ISSUE 7 satellite).
+
+Two checks, both cheap enough for every push:
+
+* every intra-repo markdown link (``[text](relative/path)``) in the
+  repo's tracked ``*.md`` files resolves to an existing file — anchors
+  and external ``http(s)``/``mailto`` links are skipped;
+* every ``REPRO_*`` environment knob referenced anywhere under ``src/``
+  appears as a table row in the docs/STORAGE.md knob table, so a new
+  knob cannot ship undocumented.
+
+Run from the repo root: ``python scripts/check_docs.py``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+STORAGE_MD = REPO / "docs" / "STORAGE.md"
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets must resolve too.  Nested ")" in targets are not used here.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_ENV = re.compile(r"\bREPRO_[A-Z][A-Z0-9_]*\b")
+
+SKIP_DIRS = {".git", "artifacts", "__pycache__", ".pytest_cache",
+             ".hypothesis", "node_modules"}
+# harvested external reference material (quoted verbatim from other
+# repos/papers) — their links point outside this repository by design
+SKIP_FILES = {"SNIPPETS.md", "PAPERS.md", "PAPER.md"}
+
+
+def iter_markdown() -> list[Path]:
+    out = []
+    for p in REPO.rglob("*.md"):
+        rel = p.relative_to(REPO)
+        if SKIP_DIRS.intersection(rel.parts) or rel.name in SKIP_FILES:
+            continue
+        out.append(p)
+    return sorted(out)
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in iter_markdown():
+        for target in _LINK.findall(md.read_text(encoding="utf-8")):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            base = REPO if rel.startswith("/") else md.parent
+            if not (base / rel.lstrip("/")).exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_env_knobs() -> list[str]:
+    used: set[str] = set()
+    for py in sorted((REPO / "src").rglob("*.py")):
+        used.update(_ENV.findall(py.read_text(encoding="utf-8")))
+    if not STORAGE_MD.exists():
+        return [f"{STORAGE_MD.relative_to(REPO)} missing (knob table home)"]
+    # only markdown table rows count as documentation — a knob merely
+    # mentioned in prose is not "in the knob table"
+    table_rows = [ln for ln in STORAGE_MD.read_text(encoding="utf-8")
+                  .splitlines() if ln.lstrip().startswith("|")]
+    documented = set()
+    for ln in table_rows:
+        documented.update(_ENV.findall(ln))
+    errors = [f"src/ references {var} but docs/STORAGE.md's knob table "
+              "has no row for it" for var in sorted(used - documented)]
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_env_knobs()
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if errors:
+        print(f"check_docs: FAILED ({len(errors)} problems)",
+              file=sys.stderr)
+        return 1
+    n_md = len(iter_markdown())
+    print(f"check_docs: OK — links resolve across {n_md} markdown files; "
+          "every REPRO_* knob documented in docs/STORAGE.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

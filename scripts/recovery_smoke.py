@@ -1,15 +1,19 @@
-"""Durable-tier recovery smoke for CI (ISSUE 3 satellite).
+"""Durable-tier recovery smoke for CI (ISSUE 3 satellite; multi-level
+since ISSUE 7).
 
 Two phases in two processes:
 
-* child  (``--build DIR``): opens a sharded durable store, admits several
-  committed waves through the engine, prints the committed state as JSON,
-  then writes ONE more wave without committing it and exits via
-  ``os._exit`` — no ``close()``, no atexit, no buffered-tail flush.  The
-  SIGKILL-free analogue of a crash.
+* child  (``--build DIR``): opens a sharded durable store with a tiny
+  memtable and an aggressive ``level_ratio=2``, admits enough committed
+  waves that spills cascade through leveled compaction (the child asserts
+  the tree really is multi-level before exiting), prints the committed
+  state as JSON, then writes ONE more wave without committing it and
+  exits via ``os._exit`` — no ``close()``, no atexit, no buffered-tail
+  flush.  The SIGKILL-free analogue of a crash.
 * parent (default): runs the child, reopens the directory, and asserts
   the record count and epoch match what the child committed — and that
-  the child's uncommitted wave is gone (Δ = 1 wave across restart).
+  the child's uncommitted wave is gone (Δ = 1 wave across restart), over
+  a store whose reads traverse multiple compaction levels.
 
 Run from the repo root: ``python scripts/recovery_smoke.py``.
 """
@@ -34,17 +38,24 @@ def build(root: str) -> None:
     from repro.core.engine import BatchPlanner, HostEngine
     from repro.storage import open_durable_store
 
-    store = open_durable_store(root, n_shards=2)
+    # tiny memtable + ratio 2: wave commits spill constantly and the
+    # spills cascade through leveled compaction while the store serves
+    store = open_durable_store(root, n_shards=2, memtable_limit=16,
+                               level_ratio=2)
     host = HostEngine(store)
     pl = BatchPlanner(host)
     pl.admit("/d0", R.DirRecord(name="d0"))
-    for wave in range(4):
-        for i in range(3):
-            pl.admit(f"/d0/w{wave}_{i}",
+    for wave in range(10):
+        for i in range(6):
+            pl.admit(f"/d{i % 3}/w{wave}_{i}",
                      R.FileRecord(name=f"w{wave}_{i}", text=f"{wave}:{i}"))
         pl.flush()
         host.refresh()                       # wave boundary = WAL commit
-    committed = {"epoch": host.epoch, "paths": store.count()}
+    levels = [sh.engine.level_counts() for sh in store.shards]
+    assert any(max(lc, default=0) >= 1 for lc in levels), \
+        f"build never produced a multi-level store: {levels}"
+    committed = {"epoch": host.epoch, "paths": store.count(),
+                 "levels": levels}
     print(json.dumps(committed), flush=True)
     # one more wave, executed but never committed — must not survive
     pl.admit(UNCOMMITTED_PATH, R.FileRecord(name="m", text="lost"))
@@ -81,6 +92,11 @@ def main() -> int:
     store = open_durable_store(root)
     host = HostEngine(store)
     ok = True
+    reopened_levels = [sh.engine.level_counts() for sh in store.shards]
+    if not any(max(lc, default=0) >= 1 for lc in reopened_levels):
+        print(f"recovery smoke: reopened store is not multi-level: "
+              f"{reopened_levels}", file=sys.stderr)
+        ok = False
     if host.epoch != committed["epoch"]:
         print(f"recovery smoke: epoch {host.epoch} != committed "
               f"{committed['epoch']}", file=sys.stderr)
@@ -97,7 +113,8 @@ def main() -> int:
     shutil.rmtree(SCRATCH, ignore_errors=True)
     if ok:
         print(f"recovery smoke: OK — reopened {committed['paths']} records "
-              f"at epoch {committed['epoch']}; uncommitted wave dropped")
+              f"at epoch {committed['epoch']} across levels "
+              f"{reopened_levels}; uncommitted wave dropped")
         return 0
     return 1
 

@@ -38,3 +38,6 @@ python scripts/bench_gate.py artifacts/BENCH_smoke.txt \
 
 echo "== durable-tier recovery smoke (build → crash → reopen) =="
 python scripts/recovery_smoke.py
+
+echo "== docs consistency (links + REPRO_* knob table) =="
+python scripts/check_docs.py

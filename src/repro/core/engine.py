@@ -65,6 +65,11 @@ W_ADMIT, W_UPDATE, W_UNLINK = "w_admit", "w_update", "w_unlink"
 REFRESH = "refresh"
 READ_OPS = (Q1, Q2, Q3, Q4, Q4C)
 WRITE_OPS = (W_ADMIT, W_UPDATE, W_UNLINK)
+# durable-tier read-path counters surfaced through QueryEngine.stats
+# (``stats.ops[...]`` is the running count; fed by sync_durable_stats)
+D_BLOOM_NEG = "d_bloom_neg"     # segment probes skipped by a bloom negative
+D_CACHE_HIT = "d_cache_hit"     # block-cache hits on segment point reads
+D_CACHE_MISS = "d_cache_miss"   # block-cache misses (block parsed off mmap)
 
 
 # ---------------------------------------------------------------------------
@@ -146,21 +151,27 @@ class QueryEngine:
 
     # -- reads -------------------------------------------------------------
     def q1_get(self, paths: Sequence[str]) -> list[Optional[R.Record]]:
+        """Point lookup: one record (or None) per path, order-preserving."""
         raise NotImplementedError
 
     def q2_ls(self, paths: Sequence[str]
               ) -> list[Optional[tuple[R.DirRecord, list[str]]]]:
+        """Directory listing: (dir record, sorted child names) per path,
+        None where the path is absent or not a directory."""
         raise NotImplementedError
 
     def q3_navigate(self, paths: Sequence[str]) -> list[list[R.Record]]:
+        """Ancestor chain root→leaf per path (empty if the leaf is absent)."""
         raise NotImplementedError
 
     def q4_search(self, prefixes: Sequence[str],
                   limit: int | None = None) -> list[list[str]]:
+        """Prefix scan over the ordered path namespace, ``limit`` per prefix."""
         raise NotImplementedError
 
     def q4_contains(self, tokens: Sequence[str],
                     limit: int | None = None) -> list[list[str]]:
+        """Inverted-index token search: matching paths per token."""
         raise NotImplementedError
 
     # -- writes ------------------------------------------------------------
@@ -460,12 +471,45 @@ class HostEngine(QueryEngine):
         # exists solely for device-tier rehydration, and only a
         # DeviceEngine (whose refresh DEVMARKs clear it) may attach it;
         # a host-only attach would grow the pending list forever
+        self._durable_seen: dict[str, int] = {}
         self._restore_epoch()
 
     def refresh(self, force: bool = False) -> int:
+        """Drain the invalidation bus, commit the wave (see base class),
+        and fold the durable tier's read-path counters into ``stats``."""
         if self.writer.bus is not None:
             self.writer.bus.drain()
-        return super().refresh(force)
+        out = super().refresh(force)
+        self.sync_durable_stats()
+        return out
+
+    #: (engine-level op counter, stats key) pairs mirrored by
+    #: :meth:`sync_durable_stats` — the DurableKV read-path telemetry
+    _DURABLE_COUNTERS = (("bloom_neg", D_BLOOM_NEG),
+                         ("cache_hit", D_CACHE_HIT),
+                         ("cache_miss", D_CACHE_MISS))
+
+    def sync_durable_stats(self) -> None:
+        """Surface the durable tier's bloom/cache counters through
+        ``self.stats`` (delta'd, so repeated calls never double-count).
+
+        ``stats.ops[D_BLOOM_NEG]`` then reads as "segment probes skipped
+        by a bloom negative so far", ``stats.ops[D_CACHE_HIT]`` /
+        ``[D_CACHE_MISS]`` as block-cache accounting — summed across
+        shards on a ``ShardedPathStore``.  Called automatically at every
+        ``refresh()``; benchmarks/tests call it directly after a
+        read-only burst (reads never trigger a refresh).  No-op over
+        volatile stores (MemKV counts no ``bloom_neg``/``cache_*``)."""
+        oc = getattr(self.store, "op_counts", None)
+        if oc is None:
+            return
+        counts = oc()
+        for src, dst in self._DURABLE_COUNTERS:
+            cur = counts.get(src, 0)
+            prev = self._durable_seen.get(src, 0)
+            if cur > prev:
+                self.stats.record(dst, cur - prev)
+                self._durable_seen[src] = cur
 
     def q1_get(self, paths):
         self.stats.record(Q1, len(paths))

@@ -303,7 +303,14 @@ class PathStore:
                 for k, _ in self.engine.scan(_CF_PATH)]
 
     def count(self) -> int:
+        """Number of live paths (one ordered-namespace scan)."""
         return sum(1 for _ in self.engine.scan(_CF_PATH))
+
+    def op_counts(self) -> dict[str, int]:
+        """Engine-level op counters (put/get/scan plus, on a durable
+        engine, ``bloom_neg``/``cache_hit``/``cache_miss``) — the same
+        shape ``ShardedPathStore.op_counts`` aggregates per shard."""
+        return self.engine.op_counts()
 
     # -- engine maintenance / durable-tier passthroughs ---------------------
     # Duck-typed delegation so the facade works unchanged over MemKV,

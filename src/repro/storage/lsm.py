@@ -1,16 +1,34 @@
 """``DurableKV`` — the disk-backed LSM engine behind the ``KVEngine``
-protocol (ISSUE 3 tentpole).
+protocol (ISSUE 3 tentpole; leveled compaction + bloom filters + block
+cache since ISSUE 7).
 
 Write path: every put/delete appends a WAL record (buffered) and lands in
 the dict memtable.  ``commit_epoch(e)`` — called once per planner wave by
 ``QueryEngine.refresh()``, or via ``flush()`` between offline batches —
 group-commits the buffered wave to the WAL; when the memtable exceeds its
-limit the commit also *spills* it to a sorted segment file and swaps the
-manifest, after which the WAL is truncated (everything it held is now in
-a segment).
+limit the commit also *spills* it to a sorted level-0 segment and swaps
+the manifest, after which the WAL is truncated (everything it held is now
+in a segment).
 
-Read path: memtable first, then segments newest-first (tombstone-aware),
-exactly MemKV's shape with the frozen runs on disk.
+Compaction is size-tiered and leveled: when any level accumulates
+``level_ratio`` segments (default 4, ``REPRO_LEVEL_RATIO``), that one
+level's run is merged into a single segment at the next level down —
+O(bytes of the triggering level) per trigger, never O(total store).
+Data only moves downward, so every version in level L is strictly newer
+than any version of the same key below it; tombstones are dropped only
+when the merge output lands at the bottom of the tree (no older level
+left to shadow).  ``compact()`` remains the explicit *major* compaction
+(merge everything into one bottom segment — the maintenance/benchmark
+path), but the online trigger never does that.
+
+Read path: memtable first, then segments level by level (newest first
+within a level), tombstone-aware.  Each new segment carries a bloom
+filter in its footer (``REPRO_BLOOM_BITS`` bits/key, default 10; 0
+disables and writes PR-3-compatible bytes), so a point miss skips a
+segment with k bit-probes instead of touching its mmap — the key is
+hashed once per lookup, not once per segment.  An optional shared
+:class:`~repro.storage.sstable.BlockCache` (``REPRO_BLOCK_CACHE_BYTES``)
+serves hot index blocks from memory.
 
 Crash recovery (``recover()``, run at construction): load the manifest,
 sweep orphan segments, open the live segments, replay the WAL's committed
@@ -19,10 +37,12 @@ waves over them, truncate any uncommitted/corrupt tail.  Guarantees:
 * a crash loses at most the wave that had not yet committed (Δ = 1 wave
   across restart — the engine-layer tests assert this end to end);
 * a torn WAL tail is detected by CRC and cleanly dropped;
-* a crash between segment write and manifest swap leaves an orphan file
-  that recovery deletes — the WAL still holds those records, so nothing
-  is lost and nothing is duplicated (WAL replay over segments is
-  idempotent: upserts and tombstones, not increments).
+* a crash between segment write and manifest swap — whether the segment
+  was a memtable spill or a level merge — leaves an orphan file that
+  recovery deletes: the manifest still references the pre-crash inputs,
+  so the store's view is the pre-compaction one and nothing is lost or
+  duplicated (WAL replay over segments is idempotent: upserts and
+  tombstones, not increments).
 
 Epoch rehydration: COMMIT records carry the write epoch and DEVMARK
 records the epoch the device tier last applied; INV records journal
@@ -41,24 +61,78 @@ from ..core import paths as P
 from ..core.store import KVEngine, PathStore
 from . import manifest as MF
 from . import wal as W
-from .sstable import MISSING, TOMBSTONE, SSTable, write_sstable
+from .sstable import (MISSING, TOMBSTONE, BlockCache, SSTable,
+                      bloom_hash_pair, write_sstable)
 
 WAL_NAME = "wikikv.wal"
 
+#: ``REPRO_LEVEL_RATIO`` — segments a level may hold before its run is
+#: merged into the next level (size-ratio trigger; default 4, min 2)
+LEVEL_RATIO_ENV = "REPRO_LEVEL_RATIO"
+#: ``REPRO_BLOOM_BITS`` — bloom bits per key written into new segment
+#: footers (default 10 ≈ 0.8% FPR at k=7; 0 disables → PR-3 byte layout)
+BLOOM_BITS_ENV = "REPRO_BLOOM_BITS"
+#: ``REPRO_BLOCK_CACHE_BYTES`` — byte budget of the block cache
+#: ``open_durable_store`` shares across shards (default 8 MiB; 0 disables)
+BLOCK_CACHE_ENV = "REPRO_BLOCK_CACHE_BYTES"
+
+
+def resolve_level_ratio(explicit: int | None = None) -> int:
+    """Resolve the per-level compaction trigger (arg > env > default 4)."""
+    val = explicit if explicit is not None else \
+        int(os.environ.get(LEVEL_RATIO_ENV, "4"))
+    if val < 2:
+        raise ValueError(f"level_ratio must be >= 2, got {val}")
+    return val
+
+
+def resolve_bloom_bits(explicit: int | None = None) -> int:
+    """Resolve bloom bits/key for new segments (arg > env > default 10)."""
+    val = explicit if explicit is not None else \
+        int(os.environ.get(BLOOM_BITS_ENV, "10"))
+    if val < 0:
+        raise ValueError(f"bloom_bits must be >= 0, got {val}")
+    return val
+
+
+def default_block_cache(explicit_bytes: int | None = None
+                        ) -> BlockCache | None:
+    """Build the shared block cache ``open_durable_store`` hands every
+    shard (arg > env > default 8 MiB); 0 bytes → no cache (None)."""
+    val = explicit_bytes if explicit_bytes is not None else \
+        int(os.environ.get(BLOCK_CACHE_ENV, str(8 << 20)))
+    if val < 0:
+        raise ValueError(f"block cache bytes must be >= 0, got {val}")
+    return BlockCache(val) if val else None
+
 
 class DurableKV(KVEngine):
-    """Durable memtable → WAL → SSTable engine; one directory per engine
-    (per digest-range shard when used under ``ShardedPathStore``)."""
+    """Durable memtable → WAL → leveled-SSTable engine; one directory per
+    engine (per digest-range shard under ``ShardedPathStore``).
+
+    Args: ``dirname`` store directory (created; recovered if it already
+    holds a store), ``memtable_limit`` entries before a commit spills,
+    ``sync`` WAL sync mode (None → ``REPRO_WAL_SYNC``), ``level_ratio``
+    segments per level before a merge (None → ``REPRO_LEVEL_RATIO``),
+    ``bloom_bits`` filter bits/key for new segments (None →
+    ``REPRO_BLOOM_BITS``; 0 writes PR-3-layout segments), ``block_cache``
+    a shared :class:`BlockCache` or None (no cache — the default for a
+    bare engine; ``open_durable_store`` wires a shared one)."""
 
     def __init__(self, dirname: str, memtable_limit: int = 4096,
-                 sync: str | None = None, auto_compact_segments: int = 8):
+                 sync: str | None = None, level_ratio: int | None = None,
+                 bloom_bits: int | None = None,
+                 block_cache: BlockCache | None = None):
         self.dirname = dirname
         self._limit = memtable_limit
-        self._auto = auto_compact_segments
+        self._ratio = resolve_level_ratio(level_ratio)
+        self._bloom_bits = resolve_bloom_bits(bloom_bits)
+        self._cache = block_cache
         self._sync = W.sync_mode(sync)
         self._lock = threading.RLock()
         self._mem: dict[bytes, object] = {}
-        self._segments: list[SSTable] = []     # oldest first; newest wins
+        self._tables: dict[str, SSTable] = {}  # segment name -> open reader
+        self._read_order: list[tuple[MF.SegmentMeta, SSTable]] = []
         self._inval_buf: list[str] = []        # journaled, not yet committed
         self._closed = False
         os.makedirs(dirname, exist_ok=True)
@@ -74,12 +148,28 @@ class DurableKV(KVEngine):
     # ------------------------------------------------------------------
     # recovery
     # ------------------------------------------------------------------
+    def _open_table(self, name: str) -> SSTable:
+        return SSTable(os.path.join(self.dirname, name),
+                       cache=self._cache, stat=self._count)
+
+    def _rebuild_read_order(self) -> None:
+        """Recompute probe order: level ascending (lower shadows deeper),
+        newest-first within a level (chronological manifest position)."""
+        segs = self._manifest.segments
+        order = sorted(range(len(segs)),
+                       key=lambda i: (segs[i].level, -i))
+        self._read_order = [(segs[i], self._tables[segs[i].name])
+                            for i in order]
+
     def _recover(self) -> None:
+        """Manifest → orphan sweep → open segments → WAL replay →
+        truncate the uncommitted/corrupt tail (see module docstring)."""
         m = MF.load(self.dirname)
         MF.sweep_orphans(self.dirname, m)
         self._manifest = m
-        self._segments = [SSTable(os.path.join(self.dirname, name))
-                          for name in m.segments]
+        self._tables = {meta.name: self._open_table(meta.name)
+                        for meta in m.segments}
+        self._rebuild_read_order()
         self._epoch = m.epoch
         self._device_epoch = m.device_epoch
         self._pending_inval: list[str] = list(m.pending_inval)
@@ -110,24 +200,46 @@ class DurableKV(KVEngine):
     # KVEngine surface
     # ------------------------------------------------------------------
     def put(self, key: bytes, value: bytes) -> None:
+        """Upsert ``key`` → WAL buffer + memtable (durable at the next
+        ``commit_epoch``).  O(1)."""
         self._count("put")
         with self._lock:
             self._wal.append_put(key, value)
             self._mem[key] = value
 
     def delete(self, key: bytes) -> None:
+        """Tombstone ``key`` (shadows every older level until a bottom
+        merge drops it).  O(1)."""
         self._count("delete")
         with self._lock:
             self._wal.append_delete(key)
             self._mem[key] = TOMBSTONE
 
     def get(self, key: bytes) -> Optional[bytes]:
+        """Point lookup: memtable, then segments level by level (newest
+        first within a level).
+
+        Complexity: O(1) memtable hit; otherwise the key is bloom-hashed
+        **once** and each of the S live segments costs k bit-probes — a
+        negative filter skips the segment entirely (counted as
+        ``bloom_neg`` in :meth:`op_counts`) — plus, for the segments that
+        may contain it, O(log n_index) bisect + one ≤ SPARSE_EVERY-record
+        block (served from the shared block cache when attached:
+        ``cache_hit``/``cache_miss`` counters).  A miss over an all-bloom
+        store therefore touches **no** segment bytes at ~0.8% FPR."""
         self._count("get")
         with self._lock:
             v = self._mem.get(key)
             if v is not None:
                 return None if v is TOMBSTONE else v  # type: ignore[return-value]
-            for seg in reversed(self._segments):
+            hashes: tuple[int, int] | None = None
+            for meta, seg in self._read_order:
+                if seg.bloom is not None:
+                    if hashes is None:
+                        hashes = bloom_hash_pair(key)
+                    if not seg.bloom.may_contain_hashes(*hashes):
+                        self._count("bloom_neg")
+                        continue
                 v = seg.get(key)
                 if v is TOMBSTONE:
                     return None
@@ -136,10 +248,16 @@ class DurableKV(KVEngine):
         return None
 
     def scan(self, prefix: bytes) -> Iterator[tuple[bytes, bytes]]:
+        """Ordered iteration over live ``prefix``-keyed pairs (tombstones
+        resolved).  Complexity: O(hits · S) merge over every segment's
+        prefix range plus the memtable — scans bypass bloom filters and
+        the block cache by design (range reads would pollute it)."""
         self._count("scan")
         with self._lock:
             merged: dict[bytes, object] = {}
-            for seg in self._segments:          # oldest → newest
+            # oldest version first so newer levels overwrite: reversed
+            # probe order == deepest level upward, oldest-first within
+            for _, seg in reversed(self._read_order):
                 for k, v in seg.scan(prefix):
                     merged[k] = v
             for k, v in self._mem.items():
@@ -160,6 +278,9 @@ class DurableKV(KVEngine):
     # group commit + spill (the wave boundary)
     # ------------------------------------------------------------------
     def commit_epoch(self, epoch: int) -> None:
+        """Group-commit the buffered wave at ``epoch`` (monotone), then
+        spill the memtable if over its limit and run any leveled
+        compaction the spill triggers."""
         with self._lock:
             # monotone: a lagging engine sharing this store (e.g. a
             # device mirror whose own counter trails the host's) must
@@ -180,79 +301,175 @@ class DurableKV(KVEngine):
             self._inval_buf.clear()
             if len(self._mem) >= self._limit:
                 self._spill_locked()
-                if len(self._segments) >= self._auto:
-                    self._compact_locked()
+                self._maybe_compact_locked()
 
-    def _spill_locked(self) -> None:
-        """Freeze the (fully committed) memtable into a new segment and
-        make it live: segment write + fsync → manifest swap → WAL reset.
-        Each arrow is a crash boundary recovery handles (orphan sweep /
-        idempotent WAL replay)."""
-        if not self._mem:
-            return
-        name = self._manifest.alloc_segment()
-        path = os.path.join(self.dirname, name)
-        write_sstable(path, sorted(self._mem.items()),
-                      sync=self._sync == "fsync")
-        self._manifest.segments.append(name)
-        # the manifest must carry the LIVE counters, not whatever it held
-        # on disk: after a reopen the committed epoch may exist only in
-        # WAL COMMIT records, and the reset below truncates those
+    def spill(self) -> None:
+        """Commit the open wave and force the memtable to a level-0
+        segment regardless of the limit (then run any triggered leveled
+        merges).  Maintenance/benchmark hook: after it, every committed
+        record is served from segment files — a truly cold read path."""
+        with self._lock:
+            if self._wal.pending_bytes() or self._inval_buf:
+                self.commit_epoch(self._epoch)
+            self._spill_locked()
+            self._maybe_compact_locked()
+
+    def _store_manifest_locked(self) -> None:
+        """Swap the manifest carrying the LIVE counters, not whatever it
+        held on disk: after a reopen the committed epoch may exist only
+        in WAL COMMIT records, and a spill's WAL reset truncates those."""
         self._manifest.epoch = self._epoch
         self._manifest.device_epoch = self._device_epoch
         self._manifest.pending_inval = list(self._pending_inval)
         MF.store(self.dirname, self._manifest, sync=self._sync == "fsync")
-        self._segments.append(SSTable(path))
+
+    def _spill_locked(self) -> None:
+        """Freeze the (fully committed) memtable into a new level-0
+        segment and make it live: segment write + fsync → manifest swap →
+        WAL reset.  Each arrow is a crash boundary recovery handles
+        (orphan sweep / idempotent WAL replay)."""
+        if not self._mem:
+            return
+        name = self._manifest.alloc_segment()
+        path = os.path.join(self.dirname, name)
+        stats = write_sstable(path, sorted(self._mem.items()),
+                              sync=self._sync == "fsync",
+                              bloom_bits_per_key=self._bloom_bits)
+        self._manifest.segments.append(MF.SegmentMeta(
+            name=name, level=0, records=stats.n_records,
+            bytes=stats.file_bytes,
+            min_key=stats.min_key.hex(), max_key=stats.max_key.hex(),
+            bloom_k=stats.bloom_k, bloom_bits=stats.bloom_nbits))
+        self._store_manifest_locked()
+        self._tables[name] = self._open_table(name)
+        self._rebuild_read_order()
         self._mem = {}
         self._wal.reset()
 
+    # ------------------------------------------------------------------
+    # leveled compaction
+    # ------------------------------------------------------------------
+    def _maybe_compact_locked(self) -> None:
+        """Size-ratio trigger: merge any level holding ≥ ``level_ratio``
+        segments into the next level, cascading until no level is over
+        the trigger.  Each merge touches only the triggering level's
+        bytes — never the whole store."""
+        changed = True
+        while changed:
+            changed = False
+            for level in sorted(self._manifest.level_counts()):
+                if self._manifest.level_counts()[level] >= self._ratio:
+                    self._compact_level_locked(level)
+                    changed = True
+                    break
+
+    def _compact_level_locked(self, level: int) -> None:
+        """Merge level ``level``'s whole run into one segment at
+        ``level + 1``.  O(bytes of this level).  Tombstones drop only if
+        no deeper level remains to shadow (the merge output is then the
+        oldest data in the store).  Crash-safe: the merged segment only
+        becomes live at the manifest swap, and the input files are
+        deleted only after it."""
+        inputs = [m for m in self._manifest.segments if m.level == level]
+        if not inputs:
+            return
+        self._count("compact_level")
+        merged: dict[bytes, object] = {}
+        for meta in inputs:                     # oldest → newest wins
+            for k, v in self._tables[meta.name].iter_all():
+                merged[k] = v
+        # deeper data (level > this one) is strictly older: a tombstone
+        # must survive the merge to keep shadowing it
+        has_older = any(m.level > level for m in self._manifest.segments)
+        if has_older:
+            items = sorted(merged.items())
+        else:
+            items = sorted((k, v) for k, v in merged.items()
+                           if v is not TOMBSTONE)
+        keep = [m for m in self._manifest.segments if m.level != level]
+        if items:
+            name = self._manifest.alloc_segment()
+            stats = write_sstable(os.path.join(self.dirname, name), items,
+                                  sync=self._sync == "fsync",
+                                  bloom_bits_per_key=self._bloom_bits)
+            keep.append(MF.SegmentMeta(
+                name=name, level=level + 1, records=stats.n_records,
+                bytes=stats.file_bytes,
+                min_key=stats.min_key.hex(), max_key=stats.max_key.hex(),
+                bloom_k=stats.bloom_k, bloom_bits=stats.bloom_nbits))
+        self._manifest.segments = keep
+        self._store_manifest_locked()
+        for meta in inputs:
+            self._tables.pop(meta.name).close()
+            try:
+                os.remove(os.path.join(self.dirname, meta.name))
+            except FileNotFoundError:
+                pass
+        if items:
+            self._tables[name] = self._open_table(name)
+        self._rebuild_read_order()
+
     def compact(self) -> None:
+        """**Major** compaction: commit + spill the open tail, then merge
+        *every* level into one bottom segment, dropping all tombstones
+        (the merge covers the whole keyspace).  O(total bytes) — the
+        explicit maintenance/benchmark operation; the online trigger path
+        (:meth:`commit_epoch` → ``_maybe_compact_locked``) only ever
+        merges one level at a time."""
         with self._lock:
             # segments may only ever hold committed records (recovery
             # trusts them unconditionally) — close the open wave first
             if self._wal.pending_bytes() or self._inval_buf:
                 self.commit_epoch(self._epoch)
             self._spill_locked()
-            self._compact_locked()
+            self._compact_all_locked()
 
-    def _compact_locked(self) -> None:
-        """Full merge of all segments into one; tombstones drop (the merge
-        covers the whole keyspace).  Crash-safe: the merged segment only
-        becomes live at the manifest swap, and the old files are deleted
-        only after it."""
-        if not self._segments:
+    def _compact_all_locked(self) -> None:
+        """Full merge of all segments into one at the bottom level."""
+        if not self._manifest.segments:
             return
         merged: dict[bytes, object] = {}
-        for seg in self._segments:
+        for _, seg in reversed(self._read_order):   # oldest version first
             for k, v in seg.iter_all():
                 merged[k] = v
         items = sorted((k, v) for k, v in merged.items() if v is not TOMBSTONE)
+        out_level = max(1, max(m.level for m in self._manifest.segments))
         old = list(self._manifest.segments)
         if items:
             name = self._manifest.alloc_segment()
-            write_sstable(os.path.join(self.dirname, name), items,
-                          sync=self._sync == "fsync")
-            self._manifest.segments = [name]
+            stats = write_sstable(os.path.join(self.dirname, name), items,
+                                  sync=self._sync == "fsync",
+                                  bloom_bits_per_key=self._bloom_bits)
+            self._manifest.segments = [MF.SegmentMeta(
+                name=name, level=out_level, records=stats.n_records,
+                bytes=stats.file_bytes,
+                min_key=stats.min_key.hex(), max_key=stats.max_key.hex(),
+                bloom_k=stats.bloom_k, bloom_bits=stats.bloom_nbits)]
         else:
             self._manifest.segments = []
-        self._manifest.epoch = self._epoch
-        self._manifest.device_epoch = self._device_epoch
-        self._manifest.pending_inval = list(self._pending_inval)
-        MF.store(self.dirname, self._manifest, sync=self._sync == "fsync")
-        for seg in self._segments:
-            seg.close()
-        for stale in old:
+        self._store_manifest_locked()
+        for meta in old:
+            self._tables.pop(meta.name).close()
             try:
-                os.remove(os.path.join(self.dirname, stale))
+                os.remove(os.path.join(self.dirname, meta.name))
             except FileNotFoundError:
                 pass
-        self._segments = [SSTable(os.path.join(self.dirname, n))
-                          for n in self._manifest.segments]
+        if items:
+            self._tables[name] = self._open_table(name)
+        self._rebuild_read_order()
+
+    def level_counts(self) -> dict[int, int]:
+        """→ ``{level: live segment count}`` — the compaction-tree shape
+        (tests and the ``wikikv_durable_cold`` benchmark assert on it)."""
+        with self._lock:
+            return self._manifest.level_counts()
 
     # ------------------------------------------------------------------
     # epoch / invalidation journal (device rehydration contract)
     # ------------------------------------------------------------------
     def journal_invalidation(self, path: str) -> None:
+        """Journal one invalidation-bus publish into the WAL (device
+        rehydration work list; see module docstring)."""
         with self._lock:
             self._wal.append_inval(path)
             self._inval_buf.append(path)
@@ -271,9 +488,11 @@ class DurableKV(KVEngine):
             self._inval_buf.clear()
 
     def last_epoch(self) -> int:
+        """Last committed write epoch (restored across restart)."""
         return self._epoch
 
     def device_epoch(self) -> int:
+        """Epoch the device tier last DEVMARKed as fully applied."""
         return self._device_epoch
 
     def pending_invalidations(self) -> list[str]:
@@ -285,14 +504,14 @@ class DurableKV(KVEngine):
     # ------------------------------------------------------------------
     def close(self) -> None:
         """Clean shutdown: commit any buffered tail so a reopen is
-        byte-identical, then release file handles."""
+        byte-identical, then release file handles (idempotent)."""
         if self._closed:
             return
         with self._lock:
             if self._wal.pending_bytes() or self._inval_buf:
                 self.commit_epoch(self._epoch)
             self._wal.close()
-            for seg in self._segments:
+            for seg in self._tables.values():
                 seg.close()
             self._closed = True
 
@@ -301,15 +520,21 @@ class DurableKV(KVEngine):
 # store-level helpers
 # ---------------------------------------------------------------------------
 def durable_engine_factory(root: str, memtable_limit: int = 4096,
-                           sync: str | None = None
+                           sync: str | None = None,
+                           level_ratio: int | None = None,
+                           bloom_bits: int | None = None,
+                           block_cache: BlockCache | None = None
                            ) -> Callable[[int], DurableKV]:
     """Engine factory for ``ShardedPathStore``: shard *i* gets its own
     WAL + segment directory ``<root>/shard_<i>`` — per-shard group commit
     and compaction, the per-shard isolation of the in-memory tier kept on
-    disk."""
+    disk.  ``block_cache`` (if any) is shared by every shard: one global
+    byte budget, hot shards take more of it."""
     def make(i: int) -> DurableKV:
         return DurableKV(os.path.join(root, f"shard_{i:02d}"),
-                         memtable_limit=memtable_limit, sync=sync)
+                         memtable_limit=memtable_limit, sync=sync,
+                         level_ratio=level_ratio, bloom_bits=bloom_bits,
+                         block_cache=block_cache)
     return make
 
 
@@ -318,13 +543,19 @@ STORE_META = "STORE.json"
 
 def open_durable_store(root: str, n_shards: int | None = None,
                        depth_budget: int | None = P.DEFAULT_DEPTH_BUDGET,
-                       memtable_limit: int = 4096, sync: str | None = None):
+                       memtable_limit: int = 4096, sync: str | None = None,
+                       level_ratio: int | None = None,
+                       bloom_bits: int | None = None,
+                       block_cache_bytes: int | None = None):
     """Open (or create) a durable path store rooted at ``root``.
 
     ``n_shards == 1`` → a ``PathStore`` over one ``DurableKV``;
     otherwise a digest-range ``ShardedPathStore`` with one WAL+segment
     directory per shard.  Reopening an existing root recovers from disk
-    — zero re-ingestion.
+    — zero re-ingestion.  ``level_ratio`` / ``bloom_bits`` /
+    ``block_cache_bytes`` default to their ``REPRO_*`` env knobs (see
+    docs/STORAGE.md); the block cache is ONE shared LRU across all
+    shards, so the byte budget is store-global.
 
     The shard count is persisted in ``STORE.json`` at creation and
     enforced on reopen: digest-range routing depends on S, so reopening
@@ -335,6 +566,7 @@ def open_durable_store(root: str, n_shards: int | None = None,
     from ..core.engine import ShardedPathStore
     do_sync = W.sync_mode(sync) == "fsync"
     os.makedirs(root, exist_ok=True)
+    cache = default_block_cache(block_cache_bytes)
     meta_path = os.path.join(root, STORE_META)
     if os.path.exists(meta_path):
         with open(meta_path, "r", encoding="utf-8") as f:
@@ -361,10 +593,13 @@ def open_durable_store(root: str, n_shards: int | None = None,
             W.fsync_dir(root)
     if n_shards <= 1:
         return PathStore(DurableKV(root, memtable_limit=memtable_limit,
-                                   sync=sync),
+                                   sync=sync, level_ratio=level_ratio,
+                                   bloom_bits=bloom_bits, block_cache=cache),
                          depth_budget=depth_budget)
     return ShardedPathStore(
         n_shards=n_shards,
         engine_factory=durable_engine_factory(
-            root, memtable_limit=memtable_limit, sync=sync),
+            root, memtable_limit=memtable_limit, sync=sync,
+            level_ratio=level_ratio, bloom_bits=bloom_bits,
+            block_cache=cache),
         depth_budget=depth_budget)

@@ -1,18 +1,31 @@
 """Segment registry: the single source of truth for which segment files
-are live, written atomically (write-new-then-rename — the same pattern as
-``checkpoint/manager.py``'s step commit).
+are live — and, since the leveled-compaction PR, *where* each one sits in
+the level hierarchy.  Written atomically (write-new-then-rename — the
+same pattern as ``checkpoint/manager.py``'s step commit).
 
 The manifest carries everything recovery needs besides the WAL itself:
 
-* ``segments``      — live segment file names, oldest → newest (newer
-                      segments shadow older on reads)
+* ``segments``      — live :class:`SegmentMeta` entries in chronological
+                      (creation) order.  Within a level, later entries
+                      shadow earlier ones; across levels, a lower level
+                      always shadows a higher one (data only ever moves
+                      downward, so every version in level L is newer than
+                      any version of the same key below it).
 * ``next_seg``      — monotone id allocator (never reused, so a crashed
-                      spill's orphan file can never collide with a live one)
+                      spill's or merge's orphan file can never collide
+                      with a live one — and block-cache keys never alias)
 * ``epoch``         — last committed write epoch at manifest-write time
 * ``device_epoch``  — epoch the device tier had applied when last marked
 * ``pending_inval`` — journaled invalidation paths committed after
                       ``device_epoch`` (survives WAL truncation at spill
                       so device rehydration stays exact)
+
+Schema versions: format 2 (current) stores ``segments`` as objects with
+``level`` and the bloom/key-range summary; format 1 (PR 3) stored bare
+file names.  ``load`` accepts both — a PR-3 manifest opens with every
+segment at level 0 and unknown stats, and the first manifest write
+(spill or compaction) migrates it to format 2 on disk.  Round-trip
+compatibility is tested in tests/test_storage.py.
 
 A crash between segment write and manifest swap leaves an unreferenced
 ``seg_*.seg`` file; ``load`` reports live names so the engine can sweep
@@ -23,33 +36,85 @@ from __future__ import annotations
 
 import json
 import os
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 
 MANIFEST_NAME = "MANIFEST.json"
+
+#: current manifest schema version (1 = PR-3 flat names, 2 = leveled)
+FORMAT = 2
+
+
+@dataclass
+class SegmentMeta:
+    """One live segment's manifest entry.
+
+    ``min_key``/``max_key`` are hex-encoded (JSON-safe) first/last keys;
+    empty string means unknown (a migrated PR-3 segment).  ``bloom_k`` /
+    ``bloom_bits`` summarize the filter serialized in the segment footer
+    (0/0 → the segment carries none and every probe must touch it)."""
+
+    name: str
+    level: int = 0
+    records: int = 0
+    bytes: int = 0
+    min_key: str = ""
+    max_key: str = ""
+    bloom_k: int = 0
+    bloom_bits: int = 0
 
 
 @dataclass
 class Manifest:
-    segments: list[str] = field(default_factory=list)
+    segments: list[SegmentMeta] = field(default_factory=list)
     next_seg: int = 1
     epoch: int = 0
     device_epoch: int = 0
     pending_inval: list[str] = field(default_factory=list)
 
     def alloc_segment(self) -> str:
+        """Reserve the next (never-reused) segment file name."""
         name = f"seg_{self.next_seg:06d}.seg"
         self.next_seg += 1
         return name
 
+    def segment_names(self) -> list[str]:
+        """Live file names, chronological order."""
+        return [m.name for m in self.segments]
+
+    def level_counts(self) -> dict[int, int]:
+        """→ ``{level: number of live segments}`` (ascending levels)."""
+        out: dict[int, int] = {}
+        for m in self.segments:
+            out[m.level] = out.get(m.level, 0) + 1
+        return dict(sorted(out.items()))
+
+
+def _meta_from_json(o: object) -> SegmentMeta:
+    if isinstance(o, str):                       # format 1: bare file name
+        return SegmentMeta(name=o, level=0)
+    assert isinstance(o, dict)
+    return SegmentMeta(
+        name=str(o["name"]),
+        level=int(o.get("level", 0)),
+        records=int(o.get("records", 0)),
+        bytes=int(o.get("bytes", 0)),
+        min_key=str(o.get("min_key", "")),
+        max_key=str(o.get("max_key", "")),
+        bloom_k=int(o.get("bloom_k", 0)),
+        bloom_bits=int(o.get("bloom_bits", 0)),
+    )
+
 
 def load(dirname: str) -> Manifest:
+    """Read ``MANIFEST.json`` (either schema version); empty manifest if
+    the file does not exist (a fresh store directory)."""
     path = os.path.join(dirname, MANIFEST_NAME)
     if not os.path.exists(path):
         return Manifest()
     with open(path, "r", encoding="utf-8") as f:
         o = json.load(f)
     return Manifest(
-        segments=list(o.get("segments", [])),
+        segments=[_meta_from_json(s) for s in o.get("segments", [])],
         next_seg=int(o.get("next_seg", 1)),
         epoch=int(o.get("epoch", 0)),
         device_epoch=int(o.get("device_epoch", 0)),
@@ -58,11 +123,14 @@ def load(dirname: str) -> Manifest:
 
 
 def store(dirname: str, m: Manifest, sync: bool = True) -> None:
-    """Atomic commit: serialize to ``MANIFEST.json.tmp``, fsync, rename."""
+    """Atomic commit: serialize to ``MANIFEST.json.tmp``, fsync, rename.
+    Always writes the current (format 2, leveled) schema — this is where
+    a PR-3 manifest migrates."""
     path = os.path.join(dirname, MANIFEST_NAME)
     tmp = path + ".tmp"
     payload = json.dumps({
-        "segments": m.segments,
+        "format": FORMAT,
+        "segments": [asdict(s) for s in m.segments],
         "next_seg": m.next_seg,
         "epoch": m.epoch,
         "device_epoch": m.device_epoch,
@@ -84,8 +152,8 @@ def store(dirname: str, m: Manifest, sync: bool = True) -> None:
 
 def sweep_orphans(dirname: str, m: Manifest) -> list[str]:
     """Delete ``seg_*.seg`` files not referenced by the manifest (debris
-    from a crash between segment write and manifest swap)."""
-    live = set(m.segments)
+    from a crash between segment/merge write and manifest swap)."""
+    live = set(m.segment_names())
     removed = []
     for name in sorted(os.listdir(dirname)):
         if name.endswith(".seg") and name not in live:

@@ -24,6 +24,11 @@ part of one.
 ``replay()`` walks the log, verifying every CRC; records past the last
 valid COMMIT (an uncommitted wave, a torn write, or a corrupt tail) are
 reported via ``valid_end`` so the recovering engine can truncate them.
+
+Note: the WAL deliberately knows nothing about compaction levels — a
+record's level placement is decided at spill/merge time and recorded in
+the manifest, so the COMMIT framing needed no change for the leveled
+tier (replay always lands records in the memtable, i.e. above level 0).
 """
 from __future__ import annotations
 
@@ -93,18 +98,23 @@ class WAL:
 
     # -- buffered appends (group-committed) ---------------------------------
     def append_put(self, key: bytes, value: bytes) -> None:
+        """Buffer one upsert record (durable at the next ``commit``)."""
         self._buf += _frame(bytes([PUT]) + _U32.pack(len(key)) + key + value)
 
     def append_delete(self, key: bytes) -> None:
+        """Buffer one tombstone record for ``key``."""
         self._buf += _frame(bytes([DEL]) + key)
 
     def append_inval(self, path: str) -> None:
+        """Buffer one invalidation-bus publish (device rehydration journal)."""
         self._buf += _frame(bytes([INV]) + path.encode("utf-8"))
 
     def append_devmark(self, epoch: int) -> None:
+        """Buffer a DEVMARK: device tier has applied through ``epoch``."""
         self._buf += _frame(bytes([DEVMARK]) + _U64.pack(epoch))
 
     def pending_bytes(self) -> int:
+        """Bytes buffered since the last ``commit`` (0 ⇒ wave is clean)."""
         return len(self._buf)
 
     # -- group commit -------------------------------------------------------
@@ -130,6 +140,8 @@ class WAL:
             os.fsync(self._f.fileno())
 
     def close(self) -> None:
+        """Release the file handle (buffered, uncommitted records drop —
+        exactly the crash semantics a real crash would have)."""
         self._f.close()
 
 
@@ -166,6 +178,8 @@ class ReplayResult:
 
 
 def replay(path: str) -> ReplayResult:
+    """Scan the log at ``path`` and return its committed waves (see
+    :class:`ReplayResult`); a missing file replays as empty."""
     waves: list[list[WALRecord]] = []
     current: list[WALRecord] = []
     valid_end = 0

@@ -752,3 +752,48 @@ def test_patch_refresh_parity_with_rebuild_engine():
         ["/", "/d0", "/d0/sub"])
     assert dev_p.q4_contains(["leaf", "sub", "e1", "e0"]) == dev_r.q4_contains(
         ["leaf", "sub", "e1", "e0"])
+
+
+def test_host_engine_surfaces_durable_read_counters(tmp_path):
+    """ISSUE 7: bloom-negative and block-cache counters from the durable
+    tier surface through ``QueryEngine.stats`` (delta'd — refresh after
+    refresh never double-counts), and stay absent over volatile stores."""
+    from repro.core.engine import D_BLOOM_NEG, D_CACHE_HIT, D_CACHE_MISS
+    from repro.storage import open_durable_store
+
+    root = str(tmp_path / "wiki")
+    store = open_durable_store(root, n_shards=2, sync="none",
+                               memtable_limit=8, level_ratio=100)
+    eng = HostEngine(store)
+    for i in range(48):
+        # varied names: FNV digests of near-identical short paths skew,
+        # and both shards must end up holding segments
+        eng.admit_many([(f"/d{i % 4}/ent_{i * 37}",
+                         R.FileRecord(name=f"ent_{i * 37}",
+                                      text=f"body {i}"))])
+        if i % 8 == 7:
+            eng.refresh(force=True)       # wave commit → spill
+    eng.refresh(force=True)
+    assert all(sh.engine.level_counts() for sh in store.shards), \
+        "setup: every shard must hold at least one segment"
+
+    misses = [f"/d{i % 4}/absent_{i * 53}" for i in range(16)]
+    assert eng.q1_get(misses) == [None] * 16
+    eng.sync_durable_stats()
+    negs = eng.stats.ops.get(D_BLOOM_NEG, 0)
+    assert negs > 0, "miss probes produced no bloom negatives"
+    eng.sync_durable_stats()              # idempotent: no new reads
+    assert eng.stats.ops.get(D_BLOOM_NEG, 0) == negs
+
+    hit = eng.q1_get(["/d3/ent_111"])[0]  # repeated hits warm the cache
+    assert hit is not None and eng.q1_get(["/d3/ent_111"])[0] is not None
+    eng.sync_durable_stats()
+    assert eng.stats.ops.get(D_CACHE_HIT, 0) + \
+        eng.stats.ops.get(D_CACHE_MISS, 0) > 0
+    store.close()
+
+    mem_eng = HostEngine(ShardedPathStore(n_shards=2))
+    mem_eng.q1_get(["/nope"])
+    mem_eng.sync_durable_stats()
+    assert D_BLOOM_NEG not in mem_eng.stats.ops
+    assert D_CACHE_HIT not in mem_eng.stats.ops

@@ -284,13 +284,18 @@ def test_commit_epoch_monotone_and_advance_durable(tmp_path):
 
 def test_manifest_atomic_and_orphan_sweep(tmp_path):
     d = str(tmp_path)
-    m = MF.Manifest(segments=["seg_000001.seg"], next_seg=2, epoch=7,
+    meta = MF.SegmentMeta(name="seg_000001.seg", level=2, records=10,
+                          bytes=123, min_key=b"a".hex(), max_key=b"z".hex(),
+                          bloom_k=7, bloom_bits=640)
+    m = MF.Manifest(segments=[meta], next_seg=2, epoch=7,
                     device_epoch=5, pending_inval=["/a"])
     MF.store(d, m, sync=False)
     assert not os.path.exists(os.path.join(d, MF.MANIFEST_NAME + ".tmp"))
     m2 = MF.load(d)
     assert (m2.segments, m2.next_seg, m2.epoch, m2.device_epoch,
-            m2.pending_inval) == (["seg_000001.seg"], 2, 7, 5, ["/a"])
+            m2.pending_inval) == ([meta], 2, 7, 5, ["/a"])
+    assert m2.segment_names() == ["seg_000001.seg"]
+    assert m2.level_counts() == {2: 1}
     open(os.path.join(d, "seg_000009.seg"), "wb").close()
     removed = MF.sweep_orphans(d, m2)
     assert removed == ["seg_000009.seg"]
@@ -409,3 +414,344 @@ def test_wal_directory_cleanup_shapes(tmp_path):
     assert WAL_NAME in names
     assert any(n.endswith(".seg") for n in names)
     shutil.rmtree(d)
+
+# ---------------------------------------------------------------------------
+# ISSUE 7: leveled compaction, bloom filters, block cache
+# ---------------------------------------------------------------------------
+import json
+import struct
+
+from repro.storage.lsm import default_block_cache, resolve_level_ratio
+from repro.storage.sstable import (END_MAGIC, END_MAGIC_V1, MAGIC,
+                                   SPARSE_EVERY, BlockCache, BloomFilter)
+
+
+def _fill(kv, lo, hi, commit_epoch):
+    for i in range(lo, hi):
+        kv.put(f"k{i:05d}".encode(), f"v{i}".encode())
+    kv.commit_epoch(commit_epoch)
+
+
+def test_leveled_compaction_merges_only_triggering_level(tmp_path):
+    """ISSUE 7 acceptance: the online trigger merges the triggering
+    level's run into ONE next-level segment and touches nothing else —
+    asserted via per-level segment counts AND the untouched segment's
+    file name surviving the merge."""
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=4, sync="none", level_ratio=3)
+    # two spills: L0 = 2 (below the ratio-3 trigger)
+    _fill(kv, 0, 4, 1)
+    _fill(kv, 4, 8, 2)
+    assert kv.level_counts() == {0: 2}
+    # third spill trips the trigger: L0's 3-segment run merges into ONE
+    # L1 segment; nothing else existed, so the tree is exactly {1: 1}
+    _fill(kv, 8, 12, 3)
+    assert kv.level_counts() == {1: 1}
+    l1_name = kv._manifest.segments[0].name
+    # two more spills: L0 grows beside the L1 segment, no trigger
+    _fill(kv, 12, 16, 4)
+    _fill(kv, 16, 20, 5)
+    assert kv.level_counts() == {0: 2, 1: 1}
+    # the next spill merges ONLY level 0: the L1 segment file must
+    # survive untouched (same name — it was not rewritten), L1 grows to 2
+    _fill(kv, 20, 24, 6)
+    assert kv.level_counts() == {1: 2}
+    survivors = [m.name for m in kv._manifest.segments if m.level == 1]
+    assert l1_name in survivors, "merge rewrote a non-triggering level"
+    # every key remains visible through the tree
+    assert kv.get(b"k00000") == b"v0"
+    assert kv.get(b"k00023") == b"v23"
+    assert len(dict(kv.scan(b"k"))) == 24
+    kv.close()
+
+
+def test_leveled_cascade_and_major_compact(tmp_path):
+    """ratio-2 store cascades L0→L1→L2 as runs fill; ``compact()`` then
+    collapses the whole tree into one bottom segment."""
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=2, sync="none", level_ratio=2)
+    for w in range(8):
+        _fill(kv, 2 * w, 2 * w + 2, w + 1)
+    counts = kv.level_counts()
+    assert sum(counts.values()) >= 1 and max(counts) >= 2, counts
+    assert len(dict(kv.scan(b"k"))) == 16
+    kv.compact()
+    assert sum(kv.level_counts().values()) == 1
+    assert max(kv.level_counts()) >= 2      # stayed at the bottom level
+    assert len(dict(kv.scan(b"k"))) == 16
+    kv.close()
+
+
+def test_tombstones_survive_level_merge_until_bottom(tmp_path):
+    """A tombstone must out-live any level merge while deeper (older)
+    data still holds the key, and only disappear once the merge output
+    is the oldest data in the store."""
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=2, sync="none", level_ratio=2)
+    _fill(kv, 0, 2, 1)
+    _fill(kv, 2, 4, 2)                       # cascade → L1 holds k0..k3
+    assert kv.level_counts() == {1: 1}
+    kv.delete(b"k00000")
+    kv.put(b"x", b"1")
+    kv.commit_epoch(3)                       # spill: tombstone now in L0
+    _fill(kv, 4, 6, 4)                       # L0=2 → merges into L1 (older L1 seg exists)
+    assert kv.get(b"k00000") is None, "tombstone dropped above older data"
+    assert b"k00000" not in dict(kv.scan(b"k"))
+    kv.close()
+    kv2 = DurableKV(d, sync="none", level_ratio=2)
+    assert kv2.get(b"k00000") is None
+    kv2.compact()                            # bottom merge may now drop it
+    assert kv2.get(b"k00000") is None
+    kv2.close()
+
+
+@pytest.mark.parametrize("crash_on_call, desc", [
+    (2, "L0->L1 merge"),        # call 1 = spill manifest, 2 = L0 merge
+    (3, "L1->L2 cascade"),      # 3 = the cascading L1 merge
+])
+def test_crash_between_merge_write_and_manifest_swap(tmp_path, monkeypatch,
+                                                     crash_on_call, desc):
+    """ISSUE 7 acceptance: a crash after a level-merge segment is written
+    but before the manifest swap loses nothing and resurrects nothing —
+    the orphan merge output is swept and the pre-merge inputs still serve
+    an identical view, at every level of the cascade."""
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=2, sync="none", level_ratio=2)
+    # state on the brink of a full cascade: L0=1, L1=1 (one more spill
+    # triggers L0 merge -> L1=2 -> cascading L1 merge -> L2)
+    _fill(kv, 0, 2, 1)
+    _fill(kv, 2, 4, 2)                       # cascade: L1 = 1
+    _fill(kv, 4, 6, 3)                       # L0 = 1
+    assert kv.level_counts() == {0: 1, 1: 1}
+    kv.close()
+
+    kv = DurableKV(d, sync="none", level_ratio=2, memtable_limit=2)
+    calls = {"n": 0}
+    real_store = MF.store
+
+    def exploding_store(dirname, m, sync=True):
+        calls["n"] += 1
+        if calls["n"] == crash_on_call:
+            raise RuntimeError(f"simulated crash during {desc}")
+        real_store(dirname, m, sync=sync)
+
+    monkeypatch.setattr(MF, "store", exploding_store)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        _fill(kv, 6, 8, 4)                   # spill + cascading merges
+    monkeypatch.setattr(MF, "store", real_store)
+    # simulated crash: abandon the wounded engine without close()
+    del kv
+
+    kv2 = DurableKV(d, sync="none", level_ratio=2, memtable_limit=2)
+    assert dict(kv2.scan(b"k")) == {f"k{i:05d}".encode(): f"v{i}".encode()
+                                    for i in range(8)}
+    for i in range(8):
+        assert kv2.get(f"k{i:05d}".encode()) == f"v{i}".encode()
+    # the merge output written before the "crash" was swept as an orphan:
+    # every .seg on disk is manifest-live
+    on_disk = {n for n in os.listdir(d) if n.endswith(".seg")}
+    assert on_disk == set(kv2._manifest.segment_names())
+    kv2.close()
+
+
+def test_bloom_filter_no_false_negatives_and_fpr():
+    """Property: every inserted key passes; the false-positive rate on
+    disjoint probes stays near the design point (~0.8% at 10 bits/key —
+    assert a generous < 3%)."""
+    present = [f"in:{i}".encode() for i in range(2000)]
+    bf = BloomFilter.build(present, bits_per_key=10)
+    assert all(bf.may_contain(k) for k in present), "false negative"
+    absent = [f"out:{i}".encode() for i in range(10000)]
+    fpr = sum(bf.may_contain(k) for k in absent) / len(absent)
+    assert fpr < 0.03, f"FPR {fpr:.4f} too high for 10 bits/key"
+
+
+@given(st.lists(st.binary(min_size=0, max_size=12), unique=True,
+                min_size=1, max_size=200))
+@settings(max_examples=30, deadline=None)
+def test_bloom_filter_never_false_negative_property(keys):
+    bf = BloomFilter.build(keys, bits_per_key=10)
+    assert all(bf.may_contain(k) for k in keys)
+
+
+def test_durablekv_bloom_skips_segments_on_miss(tmp_path):
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=4, sync="none", level_ratio=100)
+    for w in range(4):
+        _fill(kv, 4 * w, 4 * w + 4, w + 1)
+    assert kv.level_counts() == {0: 4}
+    base = kv.op_counts().get("bloom_neg", 0)
+    for i in range(50):
+        assert kv.get(f"absent{i}".encode()) is None
+    negs = kv.op_counts()["bloom_neg"] - base
+    # 50 misses x 4 segments = 200 probes; ~all should be bloom-skipped
+    assert negs >= 190, f"only {negs}/200 probes bloom-skipped"
+    kv.close()
+
+
+def test_block_cache_hit_accounting_and_eviction(tmp_path):
+    cache = BlockCache(capacity_bytes=1 << 20)
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=64, sync="none", block_cache=cache)
+    _fill(kv, 0, 64, 1)                      # one spilled segment
+    assert kv.level_counts() == {0: 1}
+    assert kv.get(b"k00003") == b"v3"        # first touch parses the block
+    c0 = kv.op_counts()
+    assert c0.get("cache_miss", 0) >= 1
+    for _ in range(10):
+        assert kv.get(b"k00003") == b"v3"
+    c1 = kv.op_counts()
+    assert c1["cache_hit"] >= c0.get("cache_hit", 0) + 10
+    assert c1["cache_miss"] == c0["cache_miss"]   # same block, no re-parse
+    assert cache.hits >= 10 and len(cache) >= 1
+    # compaction closes the old segment -> its blocks are evicted
+    kv.compact()
+    assert all(k[0].endswith(kv._manifest.segments[0].name)
+               for k in cache._d), "stale blocks survived segment delete"
+    kv.close()
+
+    # eviction under a tiny budget: walk many blocks, stay under capacity
+    tiny = BlockCache(capacity_bytes=600)
+    kv2 = DurableKV(str(tmp_path / "kv2"), memtable_limit=256, sync="none",
+                    block_cache=tiny)
+    _fill(kv2, 0, 256, 1)
+    for i in range(0, 256, SPARSE_EVERY):    # one get per index block
+        assert kv2.get(f"k{i:05d}".encode()) == f"v{i}".encode()
+    assert tiny.used_bytes() <= 600
+    assert len(tiny) < 256 // SPARSE_EVERY, "nothing was ever evicted"
+    kv2.close()
+
+
+def test_block_cache_disabled_by_env_zero(monkeypatch):
+    monkeypatch.setenv("REPRO_BLOCK_CACHE_BYTES", "0")
+    assert default_block_cache() is None
+    monkeypatch.setenv("REPRO_BLOCK_CACHE_BYTES", "1024")
+    c = default_block_cache()
+    assert isinstance(c, BlockCache) and c.capacity == 1024
+    monkeypatch.setenv("REPRO_LEVEL_RATIO", "1")
+    with pytest.raises(ValueError, match="level_ratio"):
+        resolve_level_ratio()
+
+
+def test_pr3_manifest_and_segments_migrate(tmp_path):
+    """ISSUE 7 acceptance: a PR-3 store (format-1 manifest naming bare
+    segment files, v1 segments without blooms) opens as all-level-0,
+    serves reads, and migrates to the leveled format-2 manifest on the
+    first compaction — round-tripped through a reopen."""
+    d = str(tmp_path / "kv")
+    os.makedirs(d)
+    # v1 bytes via the compatibility writer (bloom_bits_per_key=0)
+    write_sstable(os.path.join(d, "seg_000001.seg"),
+                  [(b"a", b"1"), (b"b", b"2")], sync=False,
+                  bloom_bits_per_key=0)
+    write_sstable(os.path.join(d, "seg_000002.seg"),
+                  [(b"b", b"22"), (b"c", b"3")], sync=False,
+                  bloom_bits_per_key=0)
+    with open(os.path.join(d, MF.MANIFEST_NAME), "w", encoding="utf-8") as f:
+        json.dump({"format": 1,
+                   "segments": ["seg_000001.seg", "seg_000002.seg"],
+                   "next_seg": 3, "epoch": 7, "device_epoch": 7,
+                   "pending_inval": []}, f)
+
+    kv = DurableKV(d, sync="none", memtable_limit=4)
+    assert kv.last_epoch() == 7
+    assert kv.level_counts() == {0: 2}       # PR-3 segments open at level 0
+    for meta, seg in kv._read_order:
+        assert seg.bloom is None and meta.bloom_bits == 0
+    assert kv.get(b"a") == b"1"
+    assert kv.get(b"b") == b"22"             # newer segment shadows older
+    assert dict(kv.scan(b"")) == {b"a": b"1", b"b": b"22", b"c": b"3"}
+    kv.compact()                             # first manifest write migrates
+    kv.close()
+
+    with open(os.path.join(d, MF.MANIFEST_NAME), encoding="utf-8") as f:
+        o = json.load(f)
+    assert o["format"] == MF.FORMAT == 2
+    assert all(isinstance(s, dict) and "level" in s for s in o["segments"])
+    kv2 = DurableKV(d, sync="none")
+    assert kv2.last_epoch() == 7
+    assert dict(kv2.scan(b"")) == {b"a": b"1", b"b": b"22", b"c": b"3"}
+    # post-migration segments carry blooms at the default budget
+    assert all(seg.bloom is not None for _, seg in kv2._read_order)
+    kv2.close()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["put", "delete", "commit"]),
+                          st.integers(0, 30), st.binary(min_size=0, max_size=6)),
+                min_size=20, max_size=120))
+def test_multilevel_durablekv_matches_memkv(tmp_path_factory, ops):
+    """MemKV parity under an aggressively leveled tree: tiny memtable +
+    ratio 2 force frequent spills and cascading merges, with the shared
+    block cache attached — then byte-identical again after reopen."""
+    d = str(tmp_path_factory.mktemp("kv"))
+    ref = MemKV(memtable_limit=7)
+    kv = DurableKV(d, memtable_limit=3, sync="none", level_ratio=2,
+                   block_cache=BlockCache(1 << 16))
+    epoch = 0
+    for op, ki, v in ops:
+        k = f"{ki:04d}".encode()
+        if op == "put":
+            ref.put(k, v)
+            kv.put(k, v)
+        elif op == "delete":
+            ref.delete(k)
+            kv.delete(k)
+        else:
+            epoch += 1
+            kv.commit_epoch(epoch)
+    keys = [f"{i:04d}".encode() for i in range(31)]
+    assert [kv.get(k) for k in keys] == [ref.get(k) for k in keys]
+    assert list(kv.scan(b"")) == list(ref.scan(b""))
+    kv.close()
+    kv2 = DurableKV(d, memtable_limit=3, sync="none", level_ratio=2)
+    assert [kv2.get(k) for k in keys] == [ref.get(k) for k in keys]
+    assert list(kv2.scan(b"")) == list(ref.scan(b""))
+    kv2.close()
+
+
+def test_segment_footer_matches_documented_layout(tmp_path):
+    """ISSUE 7 acceptance: the docs/STORAGE.md byte layout is asserted
+    against a real segment file — v2 footer ``<QQIIIQ`` + WEND2 and the
+    v1 compatibility footer ``<QII`` + WEND1 — by parsing raw bytes with
+    nothing but the documented offsets."""
+    items = [(f"k{i:03d}".encode(), f"v{i}".encode()) for i in range(40)]
+
+    p2 = str(tmp_path / "v2.seg")
+    stats = write_sstable(p2, items, sync=False, bloom_bits_per_key=10)
+    raw = open(p2, "rb").read()
+    assert raw[:6] == MAGIC == b"WSEG1\n"
+    assert raw[-6:] == END_MAGIC == b"WEND2\n"
+    footer = struct.Struct("<QQIIIQ")               # as documented
+    (index_off, bloom_off, n_index, n_records,
+     bloom_k, bloom_nbits) = footer.unpack(raw[-6 - footer.size:-6])
+    assert n_records == 40
+    assert n_index == (40 + SPARSE_EVERY - 1) // SPARSE_EVERY == 3
+    assert bloom_k == stats.bloom_k and bloom_nbits == stats.bloom_nbits
+    assert bloom_nbits == 40 * 10                   # n * bits_per_key
+    # section order and sizes: data | index | bloom | footer
+    assert 6 < index_off < bloom_off < len(raw)
+    assert bloom_off + (bloom_nbits + 7) // 8 == len(raw) - footer.size - 6
+    # first record at the documented offset: key_len u32 | val_len u32 | ...
+    klen, vlen = struct.unpack_from("<II", raw, 6)
+    assert raw[14:14 + klen] == b"k000" and klen == 4
+    assert raw[14 + klen:14 + klen + vlen] == b"v0"
+    # first index entry points back at the first record
+    iklen, = struct.unpack_from("<I", raw, index_off)
+    ikey = raw[index_off + 4: index_off + 4 + iklen]
+    ioff, = struct.unpack_from("<Q", raw, index_off + 4 + iklen)
+    assert ikey == b"k000" and ioff == 6
+    assert stats.file_bytes == len(raw)
+
+    p1 = str(tmp_path / "v1.seg")
+    write_sstable(p1, items, sync=False, bloom_bits_per_key=0)
+    raw1 = open(p1, "rb").read()
+    assert raw1[-6:] == END_MAGIC_V1 == b"WEND1\n"
+    f1 = struct.Struct("<QII")
+    index_off1, n_index1, n_records1 = f1.unpack(raw1[-6 - f1.size:-6])
+    assert (n_records1, n_index1) == (40, 3)
+    # v1 == v2 minus the bloom section and the wider footer
+    assert raw1[:index_off1] == raw[:index_off]
+    t = SSTable(p1)
+    assert t.bloom is None and t.get(b"k007") == b"v7"
+    t.close()
