@@ -4,28 +4,43 @@ from __future__ import annotations
 import sys
 import time
 from pathlib import Path
-from statistics import median
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core.oracle import HeuristicOracle  # noqa: E402
 from repro.core.pipeline import ConstructionPipeline, PipelineConfig  # noqa: E402
 from repro.data.corpus import AuthTraceConfig, generate_authtrace  # noqa: E402
+from repro.obs.metrics import Histogram  # noqa: E402
 
 ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts"
 
 
+def pct(samples, q: float) -> float:
+    """Percentile ``q`` of ``samples`` through the SHARED log-bucket
+    histogram (``repro.obs.metrics.Histogram``) — every table reports the
+    same percentile logic ``ServingEngine.stats_snapshot()`` uses, so a
+    benchmark p99 and a serving p99 over identical samples are identical
+    by construction (ISSUE 8)."""
+    return Histogram(samples).percentile(q)
+
+
+def latency_summary(samples) -> dict:
+    """Fixed-schema p50/p90/p99/max summary of ``samples`` (same rows as
+    the snapshot's ``latency_ms`` entries)."""
+    return Histogram(samples).summary()
+
+
 def timeit_median(fn, n_iters: int = 200, warmup: int = 50) -> float:
-    """Median wall-clock per call, in ms (paper protocol: median over
-    repeated runs after warmup)."""
+    """Median (histogram p50) wall-clock per call, in ms (paper protocol:
+    median over repeated runs after warmup)."""
     for _ in range(warmup):
         fn()
-    ts = []
+    h = Histogram()
     for _ in range(n_iters):
         t0 = time.perf_counter()
         fn()
-        ts.append((time.perf_counter() - t0) * 1000.0)
-    return median(ts)
+        h.record((time.perf_counter() - t0) * 1000.0)
+    return h.percentile(50)
 
 
 def build_wiki(n_docs=120, n_questions=60, seed=0, cfg: PipelineConfig | None = None,

@@ -11,7 +11,7 @@ import time
 
 import numpy as np
 
-from common import build_wiki, emit
+from common import build_wiki, emit, pct
 
 from repro.core.cache import TieredCache
 from repro.core.navigate import Navigator, WallClockBudget
@@ -41,9 +41,9 @@ def run(seed: int = 0):
             "pages": counts["pages"],
             "documents": counts["documents"],
             "lat_avg": float(np.mean(lats)),
-            "lat_p50": float(np.percentile(lats, 50)),
-            "lat_p95": float(np.percentile(lats, 95)),
-            "lat_p99": float(np.percentile(lats, 99)),
+            "lat_p50": pct(lats, 50),
+            "lat_p95": pct(lats, 95),
+            "lat_p99": pct(lats, 99),
         }
         out[name] = res
         for k, v in res.items():

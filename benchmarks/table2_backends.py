@@ -31,6 +31,7 @@ import tempfile
 
 from common import build_wiki, emit, timeit_median
 
+from repro import obs
 from repro.core import paths as P
 from repro.core import records as R
 from repro.core.backends import ALL_BACKENDS
@@ -143,6 +144,29 @@ def durable_cold_rows(items, rng, n_iters: int, warmup: int):
     return rows
 
 
+def trace_overhead_rows(items, targets, n_iters: int, warmup: int):
+    """Traced-vs-untraced Q1 p50 on the wikikv engine backend — the
+    ISSUE 8 report-only soak metric: the span cost a user pays for
+    turning ``REPRO_TRACE=1`` on (ratio ~1.x; the =0 path must be free
+    and is what the gated rows run under)."""
+    was = obs.enabled()
+    be = ALL_BACKENDS["wikikv"]()
+    try:
+        be.load(items)
+        it = iter(range(10**9))
+        q1 = lambda: be.q1_get(targets[next(it) % 100])  # noqa: E731
+        n = max(n_iters, 300)
+        obs.configure(enabled=False)
+        off = min(timeit_median(q1, n, max(warmup, 50)) for _ in range(3))
+        obs.configure(enabled=True)
+        on = min(timeit_median(q1, n, max(warmup, 50)) for _ in range(3))
+    finally:
+        be.close()
+        obs.configure(enabled=was)
+    return [("table2_trace_overhead_q1", round(on / off, 3),
+             f"x;off={round(off * 1000, 2)}us;on={round(on * 1000, 2)}us")]
+
+
 def run(n_iters: int = 1000, warmup: int = 200, seed: int = 0):
     pipe, docs, _ = build_wiki(n_docs=160, n_questions=80, seed=seed)
     items = collect_items(pipe)
@@ -202,6 +226,7 @@ def run(n_iters: int = 1000, warmup: int = 200, seed: int = 0):
                      f"count;ops={be.engine.stats.total_ops()}"))
         be.close()
     rows.extend(durable_cold_rows(items, rng, n_iters, warmup))
+    rows.extend(trace_overhead_rows(items, targets, n_iters, warmup))
     rows.append(("table2_wiki_kv_pairs", len(items), "count"))
     emit(rows, header="Table II: per-operator median latency by backend")
     return rows

@@ -22,7 +22,7 @@ import time
 
 import numpy as np
 
-from common import build_wiki, emit
+from common import build_wiki, emit, pct
 
 from repro.core import records as R
 from repro.core import tensorstore as TS
@@ -39,7 +39,9 @@ WAVE = 256  # concurrent navigation sessions per planner wave
 
 
 def _pct(xs, p):
-    return float(np.percentile(np.asarray(xs), p))
+    # the shared log-bucket histogram (repro.obs.metrics) — same
+    # percentile logic as ServingEngine.stats_snapshot()
+    return pct(list(xs), p)
 
 
 def _sharded_copy(store) -> ShardedPathStore:

@@ -19,6 +19,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+from repro import obs
 from repro.core.cache import TieredCache
 from repro.core.evolution import AccessLog
 from repro.core.navigate import Navigator, UnitBudget, check_progressive
@@ -39,6 +40,9 @@ def main():
                          "records straight from the leveled segments, no "
                          "re-ingestion")
     args = ap.parse_args()
+    # telemetry on for the whole demo: every navigation batch below
+    # records spans + latency histograms, summarized at exit (§6)
+    obs.configure(enabled=True)
     print("=== 1. generate corpus (AUTHTRACE protocol) ===")
     docs, questions = generate_authtrace(
         AuthTraceConfig(n_docs=100, n_questions=40, seed=42))
@@ -115,6 +119,10 @@ def main():
         print(f"re-navigated Q: {len(results2)} results, "
               f"identical to pre-restart: {match}")
         reopened.close()
+
+    sec = 6 if args.durable else 5
+    print(f"\n=== {sec}. telemetry: stats_snapshot() ===")
+    print(obs.format_snapshot(obs.build_snapshot(nav.engine, nav.planner)))
 
 
 if __name__ == "__main__":

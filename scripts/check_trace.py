@@ -1,0 +1,47 @@
+"""Validate a Chrome trace-event / Perfetto JSON export.
+
+Thin CLI over ``repro.obs.validate_events``: checks every event is a
+complete ("X") span with non-negative numeric timestamps and that spans
+are well-nested per thread; ``--require NAME`` (repeatable) additionally
+asserts named spans are present.  Exit 0 iff valid.
+
+Usage: ``python scripts/check_trace.py artifacts/TRACE_smoke.json \
+           --require serving.wave --require wal.commit``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.obs import load_events, validate_events  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="trace JSON file to validate")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="NAME",
+                    help="span name that must appear (repeatable)")
+    args = ap.parse_args()
+    try:
+        events = load_events(args.trace)
+    except (OSError, ValueError) as e:
+        print(f"check_trace: {e}", file=sys.stderr)
+        return 1
+    problems = validate_events(events, require=tuple(args.require))
+    for p in problems:
+        print(f"check_trace: {p}", file=sys.stderr)
+    if problems:
+        print(f"check_trace: {args.trace}: INVALID "
+              f"({len(problems)} problem(s) in {len(events)} events)",
+              file=sys.stderr)
+        return 1
+    print(f"check_trace: {args.trace}: OK ({len(events)} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,5 +39,14 @@ python scripts/bench_gate.py artifacts/BENCH_smoke.txt \
 echo "== durable-tier recovery smoke (build → crash → reopen) =="
 python scripts/recovery_smoke.py
 
+echo "== traced serving smoke (REPRO_TRACE=1 → Perfetto export) =="
+# one serving wave with tracing on: exports artifacts/TRACE_smoke.json
+# and validates it (monotonic, well-nested, full span chain); then the
+# standalone checker exercises the CLI path CI consumers use
+python scripts/trace_smoke.py
+python scripts/check_trace.py artifacts/TRACE_smoke.json \
+  --require serving.wave --require planner.flush \
+  --require device.refresh --require wal.commit
+
 echo "== docs consistency (links + REPRO_* knob table) =="
 python scripts/check_docs.py

@@ -46,11 +46,13 @@ from __future__ import annotations
 
 import bisect
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterator, Optional, Sequence
 
 import numpy as np
 
+from .. import obs
 from . import paths as P
 from . import records as R
 from .consistency import (CASConflict, InvalidationBus, WikiWriter,
@@ -471,16 +473,30 @@ class HostEngine(QueryEngine):
         # exists solely for device-tier rehydration, and only a
         # DeviceEngine (whose refresh DEVMARKs clear it) may attach it;
         # a host-only attach would grow the pending list forever
-        self._durable_seen: dict[str, int] = {}
         self._restore_epoch()
+
+    @property
+    def store(self) -> "PathStore | ShardedPathStore":
+        return self._store
+
+    @store.setter
+    def store(self, store: "PathStore | ShardedPathStore") -> None:
+        """(Re)attach the backing store.  The durable-counter high-water
+        marks reset with it: a swapped-in store (``ServingEngine.
+        reopen_store`` and friends) restarts its op counters at 0, so
+        stale marks from the previous store would silently drop its
+        telemetry until the new counts re-passed the old highs."""
+        self._store = store
+        self._durable_seen: dict[str, int] = {}
 
     def refresh(self, force: bool = False) -> int:
         """Drain the invalidation bus, commit the wave (see base class),
         and fold the durable tier's read-path counters into ``stats``."""
-        if self.writer.bus is not None:
-            self.writer.bus.drain()
-        out = super().refresh(force)
-        self.sync_durable_stats()
+        with obs.span("host.refresh"):
+            if self.writer.bus is not None:
+                self.writer.bus.drain()
+            out = super().refresh(force)
+            self.sync_durable_stats()
         return out
 
     #: (engine-level op counter, stats key) pairs mirrored by
@@ -513,23 +529,28 @@ class HostEngine(QueryEngine):
 
     def q1_get(self, paths):
         self.stats.record(Q1, len(paths))
-        return [self.store.get(p) for p in paths]
+        with obs.span("host.q1_get"):
+            return [self.store.get(p) for p in paths]
 
     def q2_ls(self, paths):
         self.stats.record(Q2, len(paths))
-        return [self.store.ls(p) for p in paths]
+        with obs.span("host.q2_ls"):
+            return [self.store.ls(p) for p in paths]
 
     def q3_navigate(self, paths):
         self.stats.record(Q3, len(paths))
-        return [self.store.navigate(p) for p in paths]
+        with obs.span("host.q3_navigate"):
+            return [self.store.navigate(p) for p in paths]
 
     def q4_search(self, prefixes, limit=None):
         self.stats.record(Q4, len(prefixes))
-        return [self.store.search(p, limit=limit) for p in prefixes]
+        with obs.span("host.q4_search"):
+            return [self.store.search(p, limit=limit) for p in prefixes]
 
     def q4_contains(self, tokens, limit=None):
         self.stats.record(Q4C, len(tokens))
-        return [self.store.search_contains(t, limit=limit) for t in tokens]
+        with obs.span("host.q4_contains"):
+            return [self.store.search_contains(t, limit=limit) for t in tokens]
 
 
 # ---------------------------------------------------------------------------
@@ -846,44 +867,55 @@ class DeviceEngine(QueryEngine):
             return self.epoch
         self._deferred_waves = 0
         from . import tensorstore as TS
-        resident = self.wiki.row_of
-        upserts: list[tuple[str, R.Record]] = []
-        unlinks: list[str] = []
-        for p in sorted(self._dirty):
-            rec = self.store.get(p)
-            if rec is not None:
-                upserts.append((p, rec))
-            elif p in resident:
-                unlinks.append(p)
-        self._dirty.clear()
-        had_writes = self._pending_writes > 0
-        self._pending_writes = 0
-        if not upserts and not unlinks:
-            # no visible tensor change, but the wave's WAL records (e.g.
-            # an admit+unlink that cancelled out) still need their commit
-            if had_writes:
-                self._commit_durable()
-            return self.epoch
-        delta = TS.TensorDelta(epoch=self.epoch + 1,
-                               upserts=upserts, unlinks=unlinks)
-        prev = self._st
-        wiki, recs, info = TS.apply_delta_ex(
-            self.wiki, self.records, delta, mode=self.refresh_mode)
-        if info.kind == "patch":
-            self._patch_install(prev, wiki, recs, info)
-        else:
-            self._install(wiki, recs)
-        self.delta_log.append(delta)
-        del self.delta_log[:-self.DELTA_LOG_KEEP]
-        self.epoch += 1
-        self.stats.record(REFRESH, len(delta))
-        self.stats.record(f"{REFRESH}_{info.kind}", len(delta))
-        # durable wave boundary: DEVMARK (journal applied through this
-        # epoch) rides the same WAL commit as the wave it closes
-        mark = getattr(self.store, "mark_device_epoch", None)
-        if mark is not None and getattr(self.store, "durable", False):
-            mark(self.epoch)
-        self._commit_durable()
+        with obs.span("device.refresh", dirty=len(self._dirty)) as sp:
+            with obs.span("device.refresh.delta"):
+                resident = self.wiki.row_of
+                upserts: list[tuple[str, R.Record]] = []
+                unlinks: list[str] = []
+                for p in sorted(self._dirty):
+                    rec = self.store.get(p)
+                    if rec is not None:
+                        upserts.append((p, rec))
+                    elif p in resident:
+                        unlinks.append(p)
+                self._dirty.clear()
+            had_writes = self._pending_writes > 0
+            self._pending_writes = 0
+            if not upserts and not unlinks:
+                # no visible tensor change, but the wave's WAL records
+                # (e.g. an admit+unlink that cancelled out) still need
+                # their commit
+                if had_writes:
+                    self._commit_durable()
+                return self.epoch
+            delta = TS.TensorDelta(epoch=self.epoch + 1,
+                                   upserts=upserts, unlinks=unlinks)
+            prev = self._st
+            t_apply = time.perf_counter() if obs.enabled() else 0.0
+            with obs.span("device.refresh.apply", rows=len(delta)):
+                wiki, recs, info = TS.apply_delta_ex(
+                    self.wiki, self.records, delta, mode=self.refresh_mode)
+                if info.kind == "patch":
+                    self._patch_install(prev, wiki, recs, info)
+                else:
+                    self._install(wiki, recs)
+            if t_apply:
+                # patch-vs-rebuild cost curves, separately addressable
+                obs.histogram(f"device.refresh.{info.kind}").record(
+                    (time.perf_counter() - t_apply) * 1e3)
+            sp.set(kind=info.kind, epoch=self.epoch + 1)
+            self.delta_log.append(delta)
+            del self.delta_log[:-self.DELTA_LOG_KEEP]
+            self.epoch += 1
+            self.stats.record(REFRESH, len(delta))
+            self.stats.record(f"{REFRESH}_{info.kind}", len(delta))
+            obs.set_context(epoch=self.epoch)
+            # durable wave boundary: DEVMARK (journal applied through this
+            # epoch) rides the same WAL commit as the wave it closes
+            mark = getattr(self.store, "mark_device_epoch", None)
+            if mark is not None and getattr(self.store, "durable", False):
+                mark(self.epoch)
+            self._commit_durable()
         return self.epoch
 
     # ------------------------------------------------------------------
@@ -946,10 +978,11 @@ class DeviceEngine(QueryEngine):
     # ------------------------------------------------------------------
     def q1_get(self, paths):
         self.stats.record(Q1, len(paths))
-        st = self._st
-        norm = self._norm(paths)
-        rows = self._lookup_rows(st, self._digests(norm))
-        return [st.records[r] if r >= 0 else None for r in rows]
+        with obs.span("device.q1_get"):
+            st = self._st
+            norm = self._norm(paths)
+            rows = self._lookup_rows(st, self._digests(norm))
+            return [st.records[r] if r >= 0 else None for r in rows]
 
     def q2_ls(self, paths):
         """One batched lookup; children come co-located in the resolved
@@ -958,31 +991,34 @@ class DeviceEngine(QueryEngine):
         traversal in core/tensorstore.py; the engine's record table
         already carries the same lists.)"""
         self.stats.record(Q2, len(paths))
-        st = self._st
-        norm = self._norm(paths)
-        rows = self._lookup_rows(st, self._digests(norm))
-        out = []
-        for p, r in zip(norm, rows):
-            rec = st.records[r] if r >= 0 else None
-            if rec is None or not isinstance(rec, R.DirRecord):
-                out.append(None)
-                continue
-            out.append((rec, [P.child(p, s) for s in rec.children()]))
-        return out
+        with obs.span("device.q2_ls"):
+            st = self._st
+            norm = self._norm(paths)
+            rows = self._lookup_rows(st, self._digests(norm))
+            out = []
+            for p, r in zip(norm, rows):
+                rec = st.records[r] if r >= 0 else None
+                if rec is None or not isinstance(rec, R.DirRecord):
+                    out.append(None)
+                    continue
+                out.append((rec, [P.child(p, s) for s in rec.children()]))
+            return out
 
     def q3_navigate(self, paths):
         """The whole batch's ancestor chains flatten into ONE lookup
         launch — step compression applied to the storage layer itself."""
         self.stats.record(Q3, len(paths))
-        st = self._st
-        norm = self._norm(paths)
-        chains = [list(P.ancestors(p)) + [p] for p in norm]
-        flat = [a for chain in chains for a in chain]
-        rows = self._lookup_rows(st, self._digests(flat))
-        # the flat lookup resolves every level even past a miss (the batch
-        # is issued before results are known); the per-path result still
-        # truncates at the first miss, matching PathStore.navigate
-        return self._q3_truncate(st, chains, rows)
+        with obs.span("device.q3_navigate"):
+            st = self._st
+            norm = self._norm(paths)
+            chains = [list(P.ancestors(p)) + [p] for p in norm]
+            flat = [a for chain in chains for a in chain]
+            rows = self._lookup_rows(st, self._digests(flat))
+            # the flat lookup resolves every level even past a miss (the
+            # batch is issued before results are known); the per-path
+            # result still truncates at the first miss, matching
+            # PathStore.navigate
+            return self._q3_truncate(st, chains, rows)
 
     @staticmethod
     def _q3_truncate(st: _EpochView, chains, rows) -> list[list[R.Record]]:
@@ -1010,12 +1046,16 @@ class DeviceEngine(QueryEngine):
         scan runs over the row-order token matrix (free slots are zeros,
         tombstones 255s — neither can match a real prefix), so a patch
         refresh only re-uploads the touched rows."""
-        import jax.numpy as jnp
-        from . import tensorstore as TS
-        from ..kernels.ops import prefix_search
         self.stats.record(Q4, len(prefixes))
         if not prefixes:
             return []
+        with obs.span("device.q4_search"):
+            return self._q4_search(prefixes, limit)
+
+    def _q4_search(self, prefixes, limit):
+        import jax.numpy as jnp
+        from . import tensorstore as TS
+        from ..kernels.ops import prefix_search
         st = self._st
         fixed = [p if p.startswith(P.SEP) else P.SEP + p for p in prefixes]
         L = self._max_path_bytes
@@ -1063,29 +1103,31 @@ class DeviceEngine(QueryEngine):
         self.stats.record(Q4C, len(tokens))
         if not tokens:
             return []
-        st = self._st
-        norm_toks = [t.lower() for t in tokens]
-        dig = np.zeros((len(norm_toks), 2), dtype=np.uint64)
-        for i, t in enumerate(norm_toks):
-            h = _token_hash(t)
-            dig[i] = ((h >> 32) & 0xFFFFFFFF, h & 0xFFFFFFFF)
-        rows = self._lookup_rows(st, dig, table=(st.tok_hi, st.tok_lo))
-        out: list[list[str]] = []
-        for t, r in zip(norm_toks, rows):
-            if r >= 0:
-                over = st.tok_patch.get(int(r))
-                if over is not None:
-                    prows = over
+        with obs.span("device.q4_contains"):
+            st = self._st
+            norm_toks = [t.lower() for t in tokens]
+            dig = np.zeros((len(norm_toks), 2), dtype=np.uint64)
+            for i, t in enumerate(norm_toks):
+                h = _token_hash(t)
+                dig[i] = ((h >> 32) & 0xFFFFFFFF, h & 0xFFFFFFFF)
+            rows = self._lookup_rows(st, dig, table=(st.tok_hi, st.tok_lo))
+            out: list[list[str]] = []
+            for t, r in zip(norm_toks, rows):
+                if r >= 0:
+                    over = st.tok_patch.get(int(r))
+                    if over is not None:
+                        prows = over
+                    else:
+                        lo, hi = st.tok_offsets[r], st.tok_offsets[r + 1]
+                        prows = st.tok_rows[lo:hi]
                 else:
-                    lo, hi = st.tok_offsets[r], st.tok_offsets[r + 1]
-                    prows = st.tok_rows[lo:hi]
-            else:
-                # token absent from the packed table — it may have been
-                # introduced by a patch refresh since the last rebuild
-                prows = st.tok_extra.get(t, ())
-            matches = [st.paths[i] for i in prows]
-            out.append(matches if limit is None else matches[:limit])
-        return out
+                    # token absent from the packed table — it may have
+                    # been introduced by a patch refresh since the last
+                    # rebuild
+                    prows = st.tok_extra.get(t, ())
+                matches = [st.paths[i] for i in prows]
+                out.append(matches if limit is None else matches[:limit])
+            return out
 
 
 # ---------------------------------------------------------------------------
@@ -1197,35 +1239,42 @@ class BatchPlanner:
             writes, self._writes = self._writes, []
         if not pending and not writes:
             return 0
+        depth = (sum(len(futs) for by_key in pending.values()
+                     for futs in by_key.values()) + len(writes))
         self.flushes += 1
+        obs.set_context(wave=self.flushes)
+        obs.gauge("planner.queue_depth").set(depth)
         resolved = 0
-        # reads first — every read of this wave sees the epoch pinned at
-        # wave start, untouched by this wave's writes
-        for op in READ_OPS:
-            by_key = pending.get(op)
-            if not by_key:
-                continue
-            keys = list(by_key)
-            if op == Q1:
-                results = self.engine.q1_get(keys)
-            elif op == Q2:
-                results = self.engine.q2_ls(keys)
-            elif op == Q3:
-                results = self.engine.q3_navigate(keys)
-            elif op == Q4:
-                # group by limit so one call covers each limit class
-                results = self._ranged(self.engine.q4_search, keys)
-            else:
-                results = self._ranged(self.engine.q4_contains, keys)
-            n_served = 0
-            for key, value in zip(keys, results):
-                for fut in by_key[key]:
-                    fut.value = value
-                    fut.done = True
-                    n_served += 1
-            self.engine.stats.record_served(op, n_served)
-            resolved += n_served
-        resolved += self._flush_writes(writes)
+        with obs.span("planner.flush", depth=depth,
+                      writes=len(writes)) as sp:
+            # reads first — every read of this wave sees the epoch pinned
+            # at wave start, untouched by this wave's writes
+            for op in READ_OPS:
+                by_key = pending.get(op)
+                if not by_key:
+                    continue
+                keys = list(by_key)
+                if op == Q1:
+                    results = self.engine.q1_get(keys)
+                elif op == Q2:
+                    results = self.engine.q2_ls(keys)
+                elif op == Q3:
+                    results = self.engine.q3_navigate(keys)
+                elif op == Q4:
+                    # group by limit so one call covers each limit class
+                    results = self._ranged(self.engine.q4_search, keys)
+                else:
+                    results = self._ranged(self.engine.q4_contains, keys)
+                n_served = 0
+                for key, value in zip(keys, results):
+                    for fut in by_key[key]:
+                        fut.value = value
+                        fut.done = True
+                        n_served += 1
+                self.engine.stats.record_served(op, n_served)
+                resolved += n_served
+            resolved += self._flush_writes(writes)
+            sp.set(resolved=resolved)
         return resolved
 
     def _flush_writes(self, writes) -> int:

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.cache import TieredCache
 from ..core.engine import BatchPlanner, HostEngine, QueryEngine
 from ..core.navigate import Navigator, UnitBudget
@@ -102,6 +103,9 @@ class ServingEngine:
                                                  UnitBudget(req.budget_units)),
                                 time.perf_counter())
                 self._decoding[i] = False
+                # correlation id: the most recently admitted session (the
+                # ctx is global; per-lane attribution rides span args)
+                obs.set_context(session=req.rid)
                 return True
         return False
 
@@ -113,6 +117,10 @@ class ServingEngine:
         req.nav_results = results
         req.trace = trace
         req.latency_s = time.perf_counter() - t0
+        # fold the request's navigation latency into the shared histogram
+        # (stats_snapshot percentiles; trace off ⇒ no-op)
+        obs.histogram("serving.request_nav_ms").record(req.latency_s * 1e3)
+        obs.counter("serving.requests_nav_done").inc()
         evidence = [r.text for r in results if r.text]
         req.answer = self.oracle.answer(req.query, evidence)
         self._prefill(slot, req)
@@ -166,21 +174,31 @@ class ServingEngine:
         all of them together.  The closing ``refresh()`` commits this
         step's writes to the read view, so a decode step is one wave:
         epoch staleness is bounded by Δ = 1 step."""
-        self._enqueue_write_batch()
-        finished: list[tuple[int, object, float]] = []
-        for i, nav_state in enumerate(self._nav):
-            if nav_state is None:
-                continue
-            gen, t0 = nav_state
-            try:
-                next(gen)
-            except StopIteration as e:
-                finished.append((i, e.value, t0))
-                self._nav[i] = None
-        self.planner.flush()
-        self.engine.refresh()
-        for slot, value, t0 in finished:
-            self._finish_nav(slot, value, t0)
+        with obs.span("serving.wave",
+                      lanes=sum(1 for s in self._nav if s is not None)):
+            self._enqueue_write_batch()
+            finished: list[tuple[int, object, float]] = []
+            for i, nav_state in enumerate(self._nav):
+                if nav_state is None:
+                    continue
+                gen, t0 = nav_state
+                try:
+                    next(gen)
+                except StopIteration as e:
+                    finished.append((i, e.value, t0))
+                    self._nav[i] = None
+            self.planner.flush()
+            self.engine.refresh()
+            for slot, value, t0 in finished:
+                self._finish_nav(slot, value, t0)
+        if obs.enabled():
+            # waves the device view lags behind the write log (0 when the
+            # refresh cadence is every-wave)
+            obs.gauge("serving.epoch_lag").set(
+                getattr(self.engine, "_deferred_waves", 0))
+            every = obs.stats_every()
+            if every and self.planner.flushes % every == 0:
+                self._stats_log()
 
     def step(self) -> list[Request]:
         """One serving step: one storage batch (reads + one write batch)
@@ -217,6 +235,29 @@ class ServingEngine:
                 self.slots[i] = None
                 self._decoding[i] = False
         return done
+
+    # ------------------------------------------------------------------
+    # live stats surface (ISSUE 8)
+    # ------------------------------------------------------------------
+    def stats_snapshot(self) -> dict:
+        """JSON-able live telemetry: per-op latency percentiles out of the
+        shared histograms, planner queue depth + dedup ratios, refresh
+        patch-vs-rebuild accounting, durable bloom/cache rates, and the
+        serving write queue.  Top-level keys are a stable schema (see
+        docs/OBSERVABILITY.md); cheap enough to call every wave."""
+        return obs.build_snapshot(
+            self.engine, self.planner,
+            extra={"pending_writes": self.pending_writes(),
+                   "lanes_active": sum(1 for s in self.slots
+                                       if s is not None)})
+
+    def _stats_log(self) -> None:
+        """Periodic structured stats line (``REPRO_STATS_EVERY`` waves)."""
+        import json
+        import logging
+        snap = self.stats_snapshot()
+        logging.getLogger("repro.serving").info(
+            "stats wave=%d %s", snap["waves"], json.dumps(snap))
 
     # ------------------------------------------------------------------
     # durable snapshot / reopen (ISSUE 3)

@@ -57,6 +57,7 @@ import os
 import threading
 from typing import Callable, Iterator, Optional
 
+from .. import obs
 from ..core import paths as P
 from ..core.store import KVEngine, PathStore
 from . import manifest as MF
@@ -164,6 +165,11 @@ class DurableKV(KVEngine):
     def _recover(self) -> None:
         """Manifest → orphan sweep → open segments → WAL replay →
         truncate the uncommitted/corrupt tail (see module docstring)."""
+        with obs.span("lsm.recover") as sp:
+            self._recover_impl()
+            sp.set(waves=self._epoch, dropped=self.recovery_dropped)
+
+    def _recover_impl(self) -> None:
         m = MF.load(self.dirname)
         MF.sweep_orphans(self.dirname, m)
         self._manifest = m
@@ -330,6 +336,10 @@ class DurableKV(KVEngine):
         (orphan sweep / idempotent WAL replay)."""
         if not self._mem:
             return
+        with obs.span("lsm.spill", records=len(self._mem)):
+            self._spill_impl()
+
+    def _spill_impl(self) -> None:
         name = self._manifest.alloc_segment()
         path = os.path.join(self.dirname, name)
         stats = write_sstable(path, sorted(self._mem.items()),
@@ -374,6 +384,11 @@ class DurableKV(KVEngine):
         if not inputs:
             return
         self._count("compact_level")
+        with obs.span("lsm.compact_level", level=level,
+                      segments=len(inputs)):
+            self._compact_level_impl(level, inputs)
+
+    def _compact_level_impl(self, level: int, inputs) -> None:
         merged: dict[bytes, object] = {}
         for meta in inputs:                     # oldest → newest wins
             for k, v in self._tables[meta.name].iter_all():
@@ -428,6 +443,11 @@ class DurableKV(KVEngine):
         """Full merge of all segments into one at the bottom level."""
         if not self._manifest.segments:
             return
+        with obs.span("lsm.compact_major",
+                      segments=len(self._manifest.segments)):
+            self._compact_all_impl()
+
+    def _compact_all_impl(self) -> None:
         merged: dict[bytes, object] = {}
         for _, seg in reversed(self._read_order):   # oldest version first
             for k, v in seg.iter_all():

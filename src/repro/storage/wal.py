@@ -37,6 +37,8 @@ import struct
 import zlib
 from dataclasses import dataclass
 
+from .. import obs
+
 PUT = 1
 DEL = 2
 INV = 3
@@ -122,12 +124,15 @@ class WAL:
         """One OS write for the buffered wave + its COMMIT marker, then
         flush (+fsync).  The commit marker is what makes the wave real:
         replay drops everything after the last valid COMMIT."""
-        self._buf += _frame(bytes([COMMIT]) + _U64.pack(epoch))
-        self._f.write(bytes(self._buf))
-        self._buf.clear()
-        self._f.flush()
-        if self.sync == "fsync":
-            os.fsync(self._f.fileno())
+        with obs.span("wal.commit", epoch=epoch,
+                      bytes=len(self._buf)):
+            self._buf += _frame(bytes([COMMIT]) + _U64.pack(epoch))
+            self._f.write(bytes(self._buf))
+            self._buf.clear()
+            self._f.flush()
+            if self.sync == "fsync":
+                with obs.span("wal.fsync"):
+                    os.fsync(self._f.fileno())
 
     def reset(self) -> None:
         """Truncate the log (called after a memtable spill: every committed

@@ -1,0 +1,309 @@
+"""Telemetry layer (ISSUE 8): mergeable histograms, span ring + Perfetto
+export, disabled-mode no-op, snapshot schema, durable-counter reset."""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import obs
+from repro.core import records as R
+from repro.core.engine import (D_BLOOM_NEG, D_CACHE_HIT, BatchPlanner,
+                               DeviceEngine, HostEngine)
+from repro.core.store import MemKV, PathStore
+from repro.obs.metrics import NULL_METRIC, Histogram, bucket_of
+from repro.obs.trace import NULL_SPAN
+
+
+@pytest.fixture
+def traced():
+    """Fresh ENABLED global registry; restores the env default after."""
+    reg = obs.configure(enabled=True, ring_size=4096)
+    yield reg
+    obs.configure()
+
+
+@pytest.fixture
+def untraced():
+    """Fresh DISABLED global registry; restores the env default after."""
+    reg = obs.configure(enabled=False)
+    yield reg
+    obs.configure()
+
+
+# latency-like values spanning 1µs .. 10s in ms units, plus exact zeros
+_samples = st.lists(
+    st.integers(min_value=0, max_value=10**7).map(lambda n: n / 1000.0),
+    min_size=0, max_size=60)
+
+
+# ---------------------------------------------------------------------------
+# histogram: merge ≡ pooled, percentile accuracy
+# ---------------------------------------------------------------------------
+@settings(max_examples=40)
+@given(_samples, _samples)
+def test_histogram_merge_equals_pooled(a, b):
+    """The load-bearing property: fixed global bucket boundaries make
+    merge(h(A), h(B)) identical to h(A + B) — counts, extremes, and every
+    percentile, bucket-for-bucket."""
+    merged = Histogram(a).merge(Histogram(b))
+    pooled = Histogram(a + b)
+    assert merged.counts == pooled.counts
+    assert merged.n == pooled.n and merged.zeros == pooled.zeros
+    if a or b:
+        assert merged.vmin == pooled.vmin and merged.vmax == pooled.vmax
+    assert merged.total == pytest.approx(pooled.total)
+    for q in (0, 10, 50, 90, 99, 99.9, 100):
+        assert merged.percentile(q) == pooled.percentile(q)
+
+
+@settings(max_examples=40)
+@given(st.lists(st.integers(min_value=1, max_value=10**7)
+                .map(lambda n: n / 1000.0), min_size=1, max_size=60))
+def test_histogram_percentile_within_bucket_error(xs):
+    """Reported percentiles stay within the ~2.2% half-bucket relative
+    error of the exact nearest-rank sample percentile."""
+    import math
+    h = Histogram(xs)
+    ordered = sorted(xs)
+    for q in (50, 90, 99):
+        exact = ordered[max(1, math.ceil(q / 100.0 * len(xs))) - 1]
+        got = h.percentile(q)
+        assert got == pytest.approx(exact, rel=0.023)
+    assert h.percentile(0) == ordered[0]      # exact at the extremes
+    assert h.percentile(100) == ordered[-1]
+
+
+def test_histogram_zero_and_empty():
+    assert Histogram().percentile(50) == 0.0
+    assert Histogram().summary()["count"] == 0
+    h = Histogram([0.0, 0.0, 0.0, 5.0])
+    assert h.zeros == 3
+    assert h.percentile(50) == 0.0            # rank 2 of 4 is a zero
+    assert h.percentile(100) == 5.0
+
+
+def test_bucket_width_is_sub16():
+    # adjacent bucket boundaries differ by 2^(1/16) ≈ 4.4%
+    assert bucket_of(1.0) == 0
+    assert bucket_of(2.0 ** (1 / 16) * 1.001) == 1
+
+
+# ---------------------------------------------------------------------------
+# disabled mode: no-op singletons, zero recorded state
+# ---------------------------------------------------------------------------
+def test_disabled_mode_is_noop(untraced):
+    reg = untraced
+    assert not obs.enabled()
+    # singletons, not fresh allocations
+    assert obs.span("x", tag=1) is NULL_SPAN
+    assert obs.histogram("h") is NULL_METRIC
+    assert obs.counter("c") is NULL_METRIC
+    assert obs.gauge("g") is NULL_METRIC
+    with obs.span("outer") as sp:
+        sp.set(kind="y")
+        obs.histogram("h").record(1.0)
+        obs.counter("c").inc()
+        obs.gauge("g").set(3.0)
+        obs.set_context(wave=7)
+    assert reg.ring == type(reg.ring)() and len(reg.ring) == 0
+    assert reg.histograms == {} and reg.counters == {} and reg.gauges == {}
+    assert reg.ctx == {}                      # set_context gated too
+
+
+def test_default_registry_matches_env(monkeypatch):
+    monkeypatch.delenv(obs.TRACE_ENV, raising=False)
+    try:
+        assert obs.configure().enabled is False
+        monkeypatch.setenv(obs.TRACE_ENV, "1")
+        assert obs.configure().enabled is True
+    finally:
+        monkeypatch.delenv(obs.TRACE_ENV, raising=False)
+        obs.configure()
+
+
+# ---------------------------------------------------------------------------
+# spans: ring events, histograms, nesting, correlation
+# ---------------------------------------------------------------------------
+def test_span_records_event_and_histogram(traced):
+    reg = traced
+    obs.set_context(session="s1")
+    with obs.span("outer", a=1):
+        with obs.span("inner") as sp:
+            sp.set(kind="leaf")
+    assert [e["name"] for e in reg.ring] == ["inner", "outer"]
+    inner, outer = reg.ring
+    assert inner["args"] == {"session": "s1", "kind": "leaf"}
+    assert outer["args"] == {"session": "s1", "a": 1}
+    assert inner["ts"] >= outer["ts"]
+    assert inner["dur"] <= outer["dur"] + 1e-6
+    assert reg.histograms["outer"].n == 1
+    assert reg.histograms["inner"].n == 1
+    assert obs.validate_events(list(reg.ring)) == []
+
+
+def test_span_ring_is_bounded():
+    reg = obs.configure(enabled=True, ring_size=16)
+    try:
+        for i in range(100):
+            with obs.span(f"s{i}"):
+                pass
+        assert len(reg.ring) == 16
+        assert reg.ring[-1]["name"] == "s99"
+    finally:
+        obs.configure()
+
+
+def test_validate_events_flags_overlap_and_requires():
+    bad = [
+        {"name": "a", "ph": "X", "ts": 0.0, "dur": 100.0, "tid": 1},
+        {"name": "b", "ph": "X", "ts": 50.0, "dur": 100.0, "tid": 1},
+    ]
+    problems = obs.validate_events(bad, require=("missing",))
+    assert any("overlaps" in p for p in problems)
+    assert any("missing" in p for p in problems)
+    ok = [
+        {"name": "a", "ph": "X", "ts": 0.0, "dur": 100.0, "tid": 1},
+        {"name": "b", "ph": "X", "ts": 10.0, "dur": 20.0, "tid": 1},
+        {"name": "c", "ph": "X", "ts": 40.0, "dur": 20.0, "tid": 1},
+    ]
+    assert obs.validate_events(ok, require=("a", "b", "c")) == []
+
+
+def test_trace_export_roundtrip(traced, tmp_path):
+    with obs.span("one"):
+        with obs.span("two"):
+            pass
+    out = tmp_path / "trace.json"
+    n = obs.export_trace(str(out))
+    assert n == 2
+    doc = json.loads(out.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    events = obs.load_events(str(out))
+    assert obs.validate_events(events, require=("one", "two")) == []
+
+
+def test_span_nesting_and_correlation_across_refresh_wave(traced, tmp_path):
+    """A real write wave over the durable device tier leaves a
+    well-nested trace — planner flush → device refresh → WAL commit —
+    whose storage-tier spans carry the wave id that caused them."""
+    from repro.storage import open_durable_store
+    store = open_durable_store(str(tmp_path / "wiki"), sync="none")
+    store.put_record("/", R.DirRecord(name=""))
+    store.flush()
+    dev = DeviceEngine.from_store(store)
+    pl = BatchPlanner(dev)
+    pl.admit("/d0", R.DirRecord(name="d0"))
+    pl.admit("/d0/e0", R.FileRecord(name="e0", text="v0"))
+    f = pl.get("/d0/e0")
+    pl.flush()
+    dev.refresh()
+    assert f.done
+    events = list(traced.ring)
+    assert obs.validate_events(
+        events, require=("planner.flush", "device.q1_get",
+                         "device.refresh", "wal.commit")) == []
+    by_name = {}
+    for ev in events:
+        by_name.setdefault(ev["name"], []).append(ev)
+    # correlation: the flush stamped wave=1 before any nested span closed
+    assert by_name["device.q1_get"][0]["args"]["wave"] == 1
+    assert by_name["wal.commit"][-1]["args"]["wave"] == 1
+    # the refresh span knows what the device applied
+    refresh = by_name["device.refresh"][-1]
+    assert refresh["args"]["kind"] in ("patch", "rebuild")
+    assert refresh["args"]["epoch"] == dev.epoch
+    # epoch context updated for *subsequent* spans
+    assert traced.ctx["epoch"] == dev.epoch
+    # and the per-kind refresh duration landed in a histogram
+    kinds = [k for k in ("patch", "rebuild")
+             if f"device.refresh.{k}" in traced.histograms]
+    assert kinds
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# snapshot: schema stability + percentile parity
+# ---------------------------------------------------------------------------
+def _mini_serving(store):
+    from repro.configs import get_config
+    from repro.core.oracle import HeuristicOracle
+    from repro.data.tokenizer import HashTokenizer
+    from repro.models import model as M
+    from repro.runtime.serving import ServingEngine
+    cfg = get_config("wikikv-router").reduced(d_model=32, vocab=512,
+                                              n_layers=2)
+    tok = HashTokenizer(vocab_size=cfg.vocab).fit(["x"])
+    return ServingEngine(cfg, M.init_params(cfg, seed=0), tok, store,
+                         HeuristicOracle(), batch_size=2, max_len=64)
+
+
+def test_stats_snapshot_schema_stable_on_and_off():
+    """The top-level key set is a contract: identical with tracing on
+    and off, and JSON-able in both modes."""
+    store = PathStore(MemKV())
+    store.put_record("/", R.DirRecord(name=""))
+    eng = _mini_serving(store)
+    obs.configure(enabled=True)
+    try:
+        obs.histogram("serving.request_nav_ms").record(1.25)
+        on = eng.stats_snapshot()
+        obs.configure(enabled=False)
+        off = eng.stats_snapshot()
+    finally:
+        obs.configure()
+    expected = {"trace_enabled", "epoch", "waves", "ops", "dedup_ratio",
+                "refresh", "durable", "pending", "latency_ms", "counters",
+                "gauges", "pending_writes", "lanes_active"}
+    assert set(on) == expected
+    assert set(off) == expected
+    assert on["trace_enabled"] and not off["trace_enabled"]
+    assert on["latency_ms"]["serving.request_nav_ms"]["count"] == 1
+    assert off["latency_ms"] == {}            # shape kept, content empty
+    json.dumps(on), json.dumps(off)
+
+
+def test_snapshot_percentiles_match_benchmark_logic(traced):
+    """Acceptance: snapshot p50/p99 equal the benchmark tables' shared
+    histogram percentile on identical samples (one implementation)."""
+    samples = [0.05 * (i % 97) + 0.01 for i in range(500)]
+    h = obs.histogram("op_ms")
+    for v in samples:
+        h.record(v)
+    row = traced.metrics_snapshot()["latency_ms"]["op_ms"]
+    ref = Histogram(samples)                   # == benchmarks.common.pct
+    assert row["p50"] == round(ref.percentile(50), 6)
+    assert row["p90"] == round(ref.percentile(90), 6)
+    assert row["p99"] == round(ref.percentile(99), 6)
+    assert row["max"] == round(max(samples), 6)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: durable high-water marks reset on store (re)attach
+# ---------------------------------------------------------------------------
+class _FakeDurable:
+    """op_counts-only stand-in for a durable store."""
+
+    def __init__(self, counts):
+        self.counts = counts
+
+    def op_counts(self):
+        return dict(self.counts)
+
+
+def test_durable_seen_resets_on_store_swap():
+    """Regression: after a store swap (reopen), the fresh store's
+    counters restart at 0 — stale high-water marks from the previous
+    store must not silently drop its telemetry."""
+    eng = HostEngine(PathStore(MemKV()))
+    eng.store = _FakeDurable({"bloom_neg": 5, "cache_hit": 3,
+                              "cache_miss": 1})
+    eng.sync_durable_stats()
+    assert eng.stats.ops[D_BLOOM_NEG] == 5
+    eng.sync_durable_stats()                   # delta'd: no double count
+    assert eng.stats.ops[D_BLOOM_NEG] == 5
+    # swap in a reopened store: counters restarted below the old marks
+    eng.store = _FakeDurable({"bloom_neg": 2, "cache_hit": 1,
+                              "cache_miss": 0})
+    eng.sync_durable_stats()
+    assert eng.stats.ops[D_BLOOM_NEG] == 7     # 5 + 2, nothing dropped
+    assert eng.stats.ops[D_CACHE_HIT] == 4
