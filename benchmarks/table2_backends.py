@@ -50,6 +50,10 @@ def collect_items(pipe):
 
 MIN_LEVELS = 3        # acceptance shape for the cold-store comparison
 MIN_SEGMENTS = 8
+# small enough that the byte-capacity triggers build a ≥3-level tree of
+# multi-partition levels out of a MEDIUM wiki; large enough that the
+# shape (segment count) stays in the baseline's regime
+SEGMENT_TARGET = 16384
 
 
 def _build_cold_store(items, root: str, bloom_bits: int,
@@ -62,7 +66,8 @@ def _build_cold_store(items, root: str, bloom_bits: int,
     store = open_durable_store(root, n_shards=1, memtable_limit=32,
                                sync="none", level_ratio=4,
                                bloom_bits=bloom_bits,
-                               block_cache_bytes=block_cache_bytes)
+                               block_cache_bytes=block_cache_bytes,
+                               segment_target_bytes=SEGMENT_TARGET)
     for i, (p, rec) in enumerate(items):
         store.put_record(p, rec)
         if i % 8 == 7:
@@ -88,8 +93,14 @@ def _build_cold_store(items, root: str, bloom_bits: int,
 
 
 def durable_cold_rows(items, rng, n_iters: int, warmup: int):
-    """Q1 hit/miss p50 over the cold leveled store, filters+cache on vs
-    off; the ISSUE 7 acceptance row is the miss speedup (>= 5x).
+    """Q1 hit/miss p50 over the cold leveled store, three variants:
+    the full read path (blooms + block cache + partitioned levels), the
+    PR-3/PR-5 flat path (``_nofilter``: no filters, no cache, probe
+    every segment of every level newest-first), and ``_part_nofilter``
+    (no filters/cache but partitioned binary search, report-only this
+    PR) — so the ISSUE 7 bloom/cache speedup and the ISSUE 9
+    partitioning speedup are isolated from each other on identical
+    segment files.
 
     Measured at the engine key level (the ``d:<digest>`` point lookup a
     Q1 bottoms out in) so the comparison isolates the storage tier —
@@ -101,12 +112,15 @@ def durable_cold_rows(items, rng, n_iters: int, warmup: int):
     misses = [PS.data_key(f"/zz/absent_{i * 131}") for i in range(100)]
     rows, p50 = [], {}
     shape = None
-    for label, bloom_bits, cache_bytes in (("", None, None),
-                                           ("_nofilter", 0, 0)):
+    for label, bloom_bits, cache_bytes, flat in (
+            ("", None, None, False),
+            ("_nofilter", 0, 0, True),
+            ("_part_nofilter", 0, 0, False)):
         root = tempfile.mkdtemp(prefix="wikikv_cold_")
         try:
             store = _build_cold_store(items, root, bloom_bits, cache_bytes)
             eng = store.engine
+            eng.set_flat_reads(flat)
             levels = eng.level_counts()
             shape = shape or (len(levels), sum(levels.values()))
 
@@ -128,7 +142,8 @@ def durable_cold_rows(items, rng, n_iters: int, warmup: int):
             derived = (f"us;levels={len(levels)};"
                        f"segments={sum(levels.values())};"
                        f"bloom_neg={counts.get('bloom_neg', 0)};"
-                       f"cache_hit={counts.get('cache_hit', 0)}")
+                       f"cache_hit={counts.get('cache_hit', 0)};"
+                       f"seg_probe={counts.get('seg_probe', 0)}")
             rows.append((f"table2_wikikv_durable_cold{label}_q1_hit",
                          round(q1h * 1000, 2), derived))
             rows.append((f"table2_wikikv_durable_cold{label}_q1_miss",
@@ -141,6 +156,11 @@ def durable_cold_rows(items, rng, n_iters: int, warmup: int):
                  f"x;accept>=5;levels={shape[0]};segments={shape[1]}"))
     rows.append(("table2_wikikv_durable_cold_hit_speedup",
                  round(p50["hit_nofilter"] / p50["hit"], 2), "x"))
+    # ISSUE 9 acceptance: partitioned binary search vs flat probe-all on
+    # the SAME filterless files — the pure partitioning win (>= 1.5x)
+    rows.append(("table2_wikikv_durable_cold_part_speedup",
+                 round(p50["miss_nofilter"] / p50["miss_part_nofilter"], 2),
+                 "x;accept>=1.5;report_only_soak"))
     return rows
 
 

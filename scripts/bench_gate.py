@@ -40,9 +40,14 @@ GATED_METRICS = (
 # Rows recorded in the JSON artifact and printed, but not gated; newly
 # added benchmarks soak here for one PR before joining GATED_METRICS.
 # The trace-overhead row (ISSUE 8) is the traced/untraced Q1 p50 ratio —
-# the span cost of REPRO_TRACE=1.
+# the span cost of REPRO_TRACE=1.  The ``_part_nofilter`` rows (ISSUE 9)
+# isolate key-range partitioning on filterless files; the part_speedup
+# acceptance is flat-miss/partitioned-miss >= 1.5x.
 REPORT_ONLY_METRICS = (
     "table2_trace_overhead_q1",
+    "table2_wikikv_durable_cold_part_nofilter_q1_hit",
+    "table2_wikikv_durable_cold_part_nofilter_q1_miss",
+    "table2_wikikv_durable_cold_part_speedup",
 )
 
 # Informational budget from the ISSUE 3 acceptance: durable Q1 p50 should

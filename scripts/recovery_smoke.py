@@ -39,9 +39,11 @@ def build(root: str) -> None:
     from repro.storage import open_durable_store
 
     # tiny memtable + ratio 2: wave commits spill constantly and the
-    # spills cascade through leveled compaction while the store serves
+    # spills cascade through leveled compaction while the store serves;
+    # the small segment target makes the merges PARTITION their output
+    # (multiple range-disjoint segments per level >= 1, ISSUE 9)
     store = open_durable_store(root, n_shards=2, memtable_limit=16,
-                               level_ratio=2)
+                               level_ratio=2, segment_target_bytes=512)
     host = HostEngine(store)
     pl = BatchPlanner(host)
     pl.admit("/d0", R.DirRecord(name="d0"))
@@ -54,6 +56,9 @@ def build(root: str) -> None:
     levels = [sh.engine.level_counts() for sh in store.shards]
     assert any(max(lc, default=0) >= 1 for lc in levels), \
         f"build never produced a multi-level store: {levels}"
+    assert any(any(lvl >= 1 and n >= 2 for lvl, n in lc.items())
+               for lc in levels), \
+        f"no level >= 1 ever partitioned into multiple segments: {levels}"
     committed = {"epoch": host.epoch, "paths": store.count(),
                  "levels": levels}
     print(json.dumps(committed), flush=True)
@@ -96,6 +101,22 @@ def main() -> int:
     if not any(max(lc, default=0) >= 1 for lc in reopened_levels):
         print(f"recovery smoke: reopened store is not multi-level: "
               f"{reopened_levels}", file=sys.stderr)
+        ok = False
+    # ISSUE 9: the reopened levels >= 1 must be key-range PARTITIONED —
+    # pairwise-disjoint ranges the read path can binary-search — and at
+    # least one of them multi-segment (a real partitioned merge output)
+    multi_part = False
+    for sh in store.shards:
+        for view in sh.engine._levels:
+            if view.level >= 1 and not view.partitioned:
+                print(f"recovery smoke: level {view.level} reopened "
+                      "unpartitioned (probe-all fallback)", file=sys.stderr)
+                ok = False
+            if view.level >= 1 and len(view.entries) >= 2:
+                multi_part = True
+    if not multi_part:
+        print(f"recovery smoke: no partitioned multi-segment level "
+              f"survived reopen: {reopened_levels}", file=sys.stderr)
         ok = False
     if host.epoch != committed["epoch"]:
         print(f"recovery smoke: epoch {host.epoch} != committed "

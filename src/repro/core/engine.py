@@ -72,6 +72,10 @@ WRITE_OPS = (W_ADMIT, W_UPDATE, W_UNLINK)
 D_BLOOM_NEG = "d_bloom_neg"     # segment probes skipped by a bloom negative
 D_CACHE_HIT = "d_cache_hit"     # block-cache hits on segment point reads
 D_CACHE_MISS = "d_cache_miss"   # block-cache misses (block parsed off mmap)
+D_SEG_PROBE = "d_seg_probe"     # segments considered per point read (the
+                                # partitioned-level acceptance counter)
+D_COMPACT_DEBT = "d_compact_debt"   # GAUGE, not a counter: outstanding
+                                    # merge bytes — the backpressure signal
 
 
 # ---------------------------------------------------------------------------
@@ -431,6 +435,14 @@ class ShardedPathStore:
         for s in self.shards:
             s.commit_epoch(epoch)
 
+    def compact_debt(self) -> int | None:
+        """Fleet-wide outstanding merge bytes (None if no shard is
+        durable): one shard's backlog is enough to raise backpressure,
+        so the shards sum rather than average."""
+        debts = [d for d in (s.compact_debt() for s in self.shards)
+                 if d is not None]
+        return sum(debts) if debts else None
+
     def last_epoch(self) -> int:
         return max((s.last_epoch() for s in self.shards), default=0)
 
@@ -503,19 +515,26 @@ class HostEngine(QueryEngine):
     #: :meth:`sync_durable_stats` — the DurableKV read-path telemetry
     _DURABLE_COUNTERS = (("bloom_neg", D_BLOOM_NEG),
                          ("cache_hit", D_CACHE_HIT),
-                         ("cache_miss", D_CACHE_MISS))
+                         ("cache_miss", D_CACHE_MISS),
+                         ("seg_probe", D_SEG_PROBE))
 
     def sync_durable_stats(self) -> None:
-        """Surface the durable tier's bloom/cache counters through
+        """Surface the durable tier's read-path counters through
         ``self.stats`` (delta'd, so repeated calls never double-count).
 
         ``stats.ops[D_BLOOM_NEG]`` then reads as "segment probes skipped
         by a bloom negative so far", ``stats.ops[D_CACHE_HIT]`` /
-        ``[D_CACHE_MISS]`` as block-cache accounting — summed across
-        shards on a ``ShardedPathStore``.  Called automatically at every
-        ``refresh()``; benchmarks/tests call it directly after a
-        read-only burst (reads never trigger a refresh).  No-op over
-        volatile stores (MemKV counts no ``bloom_neg``/``cache_*``)."""
+        ``[D_CACHE_MISS]`` as block-cache accounting, and
+        ``stats.ops[D_SEG_PROBE]`` as "segments considered across all
+        point reads" — the counter that proves partitioned levels probe
+        exactly one segment per level — summed across shards on a
+        ``ShardedPathStore``.  ``stats.ops[D_COMPACT_DEBT]`` is a gauge
+        (assigned, not accumulated): the store's current outstanding
+        merge bytes, the compaction backpressure signal.  Called
+        automatically at every ``refresh()``; benchmarks/tests call it
+        directly after a read-only burst (reads never trigger a
+        refresh).  No-op over volatile stores (MemKV counts none of
+        these)."""
         oc = getattr(self.store, "op_counts", None)
         if oc is None:
             return
@@ -526,6 +545,11 @@ class HostEngine(QueryEngine):
             if cur > prev:
                 self.stats.record(dst, cur - prev)
                 self._durable_seen[src] = cur
+        debt_fn = getattr(self.store, "compact_debt", None)
+        debt = debt_fn() if debt_fn is not None else None
+        if debt is not None:
+            self.stats.ops[D_COMPACT_DEBT] = debt
+            obs.gauge("lsm.compact_debt").set(debt)
 
     def q1_get(self, paths):
         self.stats.record(Q1, len(paths))

@@ -337,6 +337,12 @@ class PathStore:
         if hasattr(self.engine, "commit_epoch"):
             self.engine.commit_epoch(epoch)
 
+    def compact_debt(self) -> int | None:
+        """Outstanding merge bytes owed by a durable engine (the
+        compaction backpressure gauge); None on volatile engines."""
+        fn = getattr(self.engine, "compact_debt", None)
+        return None if fn is None else fn()
+
     def last_epoch(self) -> int:
         if hasattr(self.engine, "last_epoch"):
             return self.engine.last_epoch()

@@ -224,9 +224,15 @@ def build_snapshot(engine=None, planner=None, extra: dict | None = None) -> dict
         bloom_neg = st.ops.get("d_bloom_neg", 0)
         hit = st.ops.get("d_cache_hit", 0)
         miss = st.ops.get("d_cache_miss", 0)
+        debt = st.ops.get("d_compact_debt", 0)
         snap["durable"] = {
             "bloom_neg": bloom_neg, "cache_hit": hit, "cache_miss": miss,
             "cache_hit_rate": round(hit / (hit + miss), 4) if hit + miss else 0.0,
+            "seg_probe": st.ops.get("d_seg_probe", 0),
+            # compaction backpressure: outstanding merge bytes (gauge)
+            # and whether the serving tier should expect throttled waves
+            "compact_debt": debt,
+            "backpressure": bool(debt),
         }
     if planner is not None:
         snap["waves"] = planner.flushes
@@ -259,9 +265,14 @@ def format_snapshot(snap: dict) -> str:
         lines.append("  dedup (served/keys): " + "  ".join(
             f"{op}={r:.2f}" for op, r in sorted(snap["dedup_ratio"].items())))
     dur = snap.get("durable", {})
-    if any(dur.get(k) for k in ("bloom_neg", "cache_hit", "cache_miss")):
+    if any(dur.get(k) for k in ("bloom_neg", "cache_hit", "cache_miss",
+                                "seg_probe")):
         lines.append(f"  durable: bloom_neg={dur['bloom_neg']} "
-                     f"cache_hit_rate={dur['cache_hit_rate']:.2f}")
+                     f"cache_hit_rate={dur['cache_hit_rate']:.2f} "
+                     f"seg_probe={dur.get('seg_probe', 0)}")
+    if dur.get("compact_debt"):
+        lines.append(f"  compaction backpressure: "
+                     f"debt={dur['compact_debt']}B")
     return "\n".join(lines)
 
 

@@ -1,6 +1,7 @@
 """``DurableKV`` — the disk-backed LSM engine behind the ``KVEngine``
 protocol (ISSUE 3 tentpole; leveled compaction + bloom filters + block
-cache since ISSUE 7).
+cache since ISSUE 7; key-range-partitioned levels + compaction
+backpressure since ISSUE 9).
 
 Write path: every put/delete appends a WAL record (buffered) and lands in
 the dict memtable.  ``commit_epoch(e)`` — called once per planner wave by
@@ -10,39 +11,68 @@ limit the commit also *spills* it to a sorted level-0 segment and swaps
 the manifest, after which the WAL is truncated (everything it held is now
 in a segment).
 
-Compaction is size-tiered and leveled: when any level accumulates
-``level_ratio`` segments (default 4, ``REPRO_LEVEL_RATIO``), that one
-level's run is merged into a single segment at the next level down —
-O(bytes of the triggering level) per trigger, never O(total store).
-Data only moves downward, so every version in level L is strictly newer
-than any version of the same key below it; tombstones are dropped only
-when the merge output lands at the bottom of the tree (no older level
-left to shadow).  ``compact()`` remains the explicit *major* compaction
-(merge everything into one bottom segment — the maintenance/benchmark
-path), but the online trigger never does that.
+Compaction is leveled with key-range-partitioned levels ≥ 1:
 
-Read path: memtable first, then segments level by level (newest first
-within a level), tombstone-aware.  Each new segment carries a bloom
-filter in its footer (``REPRO_BLOOM_BITS`` bits/key, default 10; 0
-disables and writes PR-3-compatible bytes), so a point miss skips a
-segment with k bit-probes instead of touching its mmap — the key is
-hashed once per lookup, not once per segment.  An optional shared
-:class:`~repro.storage.sstable.BlockCache` (``REPRO_BLOCK_CACHE_BYTES``)
-serves hot index blocks from memory.
+* Level 0 holds whole-memtable spills (overlapping ranges); when it
+  accumulates ``level_ratio`` segments (default 4, ``REPRO_LEVEL_RATIO``)
+  the whole run is merged down.
+* Levels ≥ 1 hold segments with **disjoint key ranges**, split at
+  ``REPRO_SEGMENT_TARGET_BYTES`` (default 2 MiB) per output partition.
+  A level is triggered when its bytes exceed
+  ``segment_target_bytes · level_ratio^level``; the merge picks one
+  victim partition (the largest — fastest debt paydown) plus the
+  range-overlapping partitions of the next level, and rewrites only
+  those.  Merged bytes per trigger are O(victim + overlap), never
+  O(level), and never O(total store).
+* A legacy (pre-partitioned or migrated) level with unknown or
+  overlapping ranges is merged whole, which partitions it — stores
+  migrate themselves during normal operation.
+
+Merges are throttled: ``REPRO_COMPACT_BUDGET_BYTES`` (0 = unlimited)
+bounds the merged bytes per ``commit_epoch`` boundary.  A merge that
+exhausts the budget *pauses* after the partition it is writing:
+completed output partitions plus a resume key are recorded in the
+manifest (format 3 ``compaction`` field) by the same atomic
+write-then-swap that protects every other transition, the inputs stay
+live for readers, and the next wave resumes from the recorded key.  The
+outstanding work is exported as the ``compact_debt`` gauge (see
+:meth:`compact_debt`) so the serving tier can observe backpressure.
+``compact()`` remains the explicit *major* compaction (merge everything
+to the bottom level, partitioned, dropping all tombstones — the
+maintenance/benchmark path); it abandons any paused merge first (the
+paused outputs are redundant copies of still-live inputs).
+
+Read path: memtable first, then levels in order.  On a partitioned
+level the probe is a binary search over the partition ranges — **at
+most one segment per level** is consulted; level 0 (and any legacy
+level) is probed newest-first.  Each consulted segment is counted as
+``seg_probe`` and bloom-checked first (``REPRO_BLOOM_BITS`` bits/key,
+default 10; the key is hashed once per lookup, not once per segment).
+An optional shared :class:`~repro.storage.sstable.BlockCache`
+(``REPRO_BLOCK_CACHE_BYTES``) serves hot index blocks from memory.
+``scan`` k-way-merges only the segments whose key range can intersect
+the prefix (first-seen-wins across memtable → L0 newest-first → deeper
+levels).
 
 Crash recovery (``recover()``, run at construction): load the manifest,
-sweep orphan segments, open the live segments, replay the WAL's committed
-waves over them, truncate any uncommitted/corrupt tail.  Guarantees:
+validate any paused-merge state, sweep orphan segments (a paused
+merge's recorded outputs are *not* orphans), open the live segments,
+replay the WAL's committed waves over them, truncate any
+uncommitted/corrupt tail.  Guarantees:
 
 * a crash loses at most the wave that had not yet committed (Δ = 1 wave
   across restart — the engine-layer tests assert this end to end);
 * a torn WAL tail is detected by CRC and cleanly dropped;
-* a crash between segment write and manifest swap — whether the segment
-  was a memtable spill or a level merge — leaves an orphan file that
-  recovery deletes: the manifest still references the pre-crash inputs,
-  so the store's view is the pre-compaction one and nothing is lost or
-  duplicated (WAL replay over segments is idempotent: upserts and
-  tombstones, not increments).
+* a crash between segment write and manifest swap — spill, merge
+  partition, or merge finalize — leaves orphan files that recovery
+  deletes: the manifest still references the pre-crash inputs, so the
+  store's view is the pre-compaction one and nothing is lost or
+  duplicated (WAL replay over segments is idempotent);
+* a crash after a budget pause resumes the merge from the recorded
+  key: the already-written partitions are kept, not redone.
+
+The randomized crash-injection harness (tests/test_storage_fuzz.py,
+``storage.failpoints``) exercises all of the above against an oracle.
 
 Epoch rehydration: COMMIT records carry the write epoch and DEVMARK
 records the epoch the device tier last applied; INV records journal
@@ -53,6 +83,8 @@ dirty paths the device tier had NOT yet applied — the exact
 """
 from __future__ import annotations
 
+import bisect
+import heapq
 import os
 import threading
 from typing import Callable, Iterator, Optional
@@ -67,8 +99,8 @@ from .sstable import (MISSING, TOMBSTONE, BlockCache, SSTable,
 
 WAL_NAME = "wikikv.wal"
 
-#: ``REPRO_LEVEL_RATIO`` — segments a level may hold before its run is
-#: merged into the next level (size-ratio trigger; default 4, min 2)
+#: ``REPRO_LEVEL_RATIO`` — L0 segment-count trigger, and the per-level
+#: byte-capacity growth factor for levels ≥ 1 (default 4, min 2)
 LEVEL_RATIO_ENV = "REPRO_LEVEL_RATIO"
 #: ``REPRO_BLOOM_BITS`` — bloom bits per key written into new segment
 #: footers (default 10 ≈ 0.8% FPR at k=7; 0 disables → PR-3 byte layout)
@@ -76,6 +108,14 @@ BLOOM_BITS_ENV = "REPRO_BLOOM_BITS"
 #: ``REPRO_BLOCK_CACHE_BYTES`` — byte budget of the block cache
 #: ``open_durable_store`` shares across shards (default 8 MiB; 0 disables)
 BLOCK_CACHE_ENV = "REPRO_BLOCK_CACHE_BYTES"
+#: ``REPRO_SEGMENT_TARGET_BYTES`` — partition size compaction splits its
+#: outputs at; also the base of the per-level byte capacity
+#: ``target · ratio^level`` (default 2 MiB)
+SEGMENT_TARGET_ENV = "REPRO_SEGMENT_TARGET_BYTES"
+#: ``REPRO_COMPACT_BUDGET_BYTES`` — merged bytes allowed per
+#: ``commit_epoch`` boundary before the merge pauses resumably
+#: (default 0 = unlimited, i.e. no backpressure throttling)
+COMPACT_BUDGET_ENV = "REPRO_COMPACT_BUDGET_BYTES"
 
 
 def resolve_level_ratio(explicit: int | None = None) -> int:
@@ -96,6 +136,25 @@ def resolve_bloom_bits(explicit: int | None = None) -> int:
     return val
 
 
+def resolve_segment_target_bytes(explicit: int | None = None) -> int:
+    """Resolve the partition target size (arg > env > default 2 MiB)."""
+    val = explicit if explicit is not None else \
+        int(os.environ.get(SEGMENT_TARGET_ENV, str(2 << 20)))
+    if val < 1:
+        raise ValueError(f"segment_target_bytes must be >= 1, got {val}")
+    return val
+
+
+def resolve_compact_budget_bytes(explicit: int | None = None) -> int:
+    """Resolve the per-commit merge budget (arg > env > default 0 =
+    unlimited)."""
+    val = explicit if explicit is not None else \
+        int(os.environ.get(COMPACT_BUDGET_ENV, "0"))
+    if val < 0:
+        raise ValueError(f"compact_budget_bytes must be >= 0, got {val}")
+    return val
+
+
 def default_block_cache(explicit_bytes: int | None = None
                         ) -> BlockCache | None:
     """Build the shared block cache ``open_durable_store`` hands every
@@ -107,6 +166,34 @@ def default_block_cache(explicit_bytes: int | None = None
     return BlockCache(val) if val else None
 
 
+def _meta_range(m: MF.SegmentMeta) -> tuple[bytes, bytes] | None:
+    """A segment's decoded key range, or None when unknown (migrated
+    PR-3 metadata, or an empty-key edge case)."""
+    if m.records > 0 and m.min_key and m.max_key:
+        return bytes.fromhex(m.min_key), bytes.fromhex(m.max_key)
+    return None
+
+
+class _LevelView:
+    """Read-path view of one level, rebuilt on every manifest change.
+
+    ``partitioned`` means every segment's range is known and the ranges
+    are pairwise disjoint — then ``mins``/``maxs`` (ascending) drive a
+    binary search and a point read consults at most one segment.
+    Otherwise ``entries`` is newest-first and every segment is a probe
+    candidate (level 0, legacy levels, ``flat_reads`` mode)."""
+
+    __slots__ = ("level", "partitioned", "entries", "mins", "maxs")
+
+    def __init__(self, level: int, partitioned: bool, entries: list,
+                 mins: list | None = None, maxs: list | None = None):
+        self.level = level
+        self.partitioned = partitioned
+        self.entries = entries          # [(SegmentMeta, SSTable)]
+        self.mins = mins
+        self.maxs = maxs
+
+
 class DurableKV(KVEngine):
     """Durable memtable → WAL → leveled-SSTable engine; one directory per
     engine (per digest-range shard under ``ShardedPathStore``).
@@ -114,28 +201,45 @@ class DurableKV(KVEngine):
     Args: ``dirname`` store directory (created; recovered if it already
     holds a store), ``memtable_limit`` entries before a commit spills,
     ``sync`` WAL sync mode (None → ``REPRO_WAL_SYNC``), ``level_ratio``
-    segments per level before a merge (None → ``REPRO_LEVEL_RATIO``),
+    L0 trigger + capacity growth factor (None → ``REPRO_LEVEL_RATIO``),
     ``bloom_bits`` filter bits/key for new segments (None →
     ``REPRO_BLOOM_BITS``; 0 writes PR-3-layout segments), ``block_cache``
     a shared :class:`BlockCache` or None (no cache — the default for a
-    bare engine; ``open_durable_store`` wires a shared one)."""
+    bare engine; ``open_durable_store`` wires a shared one),
+    ``segment_target_bytes`` compaction partition size (None →
+    ``REPRO_SEGMENT_TARGET_BYTES``), ``compact_budget_bytes`` merged
+    bytes allowed per commit boundary (None →
+    ``REPRO_COMPACT_BUDGET_BYTES``; 0 = unlimited), ``flat_reads``
+    disable the per-level binary search and probe every segment — the
+    benchmark A/B switch that reproduces the pre-partitioned (PR-5)
+    read path on the same files."""
 
     def __init__(self, dirname: str, memtable_limit: int = 4096,
                  sync: str | None = None, level_ratio: int | None = None,
                  bloom_bits: int | None = None,
-                 block_cache: BlockCache | None = None):
+                 block_cache: BlockCache | None = None,
+                 segment_target_bytes: int | None = None,
+                 compact_budget_bytes: int | None = None,
+                 flat_reads: bool = False):
         self.dirname = dirname
         self._limit = memtable_limit
         self._ratio = resolve_level_ratio(level_ratio)
         self._bloom_bits = resolve_bloom_bits(bloom_bits)
         self._cache = block_cache
         self._sync = W.sync_mode(sync)
+        self._target = resolve_segment_target_bytes(segment_target_bytes)
+        self._budget = resolve_compact_budget_bytes(compact_budget_bytes)
+        self._flat_reads = bool(flat_reads)
         self._lock = threading.RLock()
         self._mem: dict[bytes, object] = {}
         self._tables: dict[str, SSTable] = {}  # segment name -> open reader
         self._read_order: list[tuple[MF.SegmentMeta, SSTable]] = []
+        self._levels: list[_LevelView] = []
         self._inval_buf: list[str] = []        # journaled, not yet committed
         self._closed = False
+        #: merged bytes spent by the most recent commit/spill boundary —
+        #: the per-wave compaction cost the backpressure tests assert on
+        self.last_compact_bytes = 0
         os.makedirs(dirname, exist_ok=True)
         self._recover()
         wal_path = os.path.join(dirname, WAL_NAME)
@@ -154,23 +258,62 @@ class DurableKV(KVEngine):
                        cache=self._cache, stat=self._count)
 
     def _rebuild_read_order(self) -> None:
-        """Recompute probe order: level ascending (lower shadows deeper),
-        newest-first within a level (chronological manifest position)."""
+        """Recompute the per-level read views and the flat probe order
+        (levels ascending; newest-first within a non-partitioned level,
+        range-ascending within a partitioned one)."""
         segs = self._manifest.segments
-        order = sorted(range(len(segs)),
-                       key=lambda i: (segs[i].level, -i))
-        self._read_order = [(segs[i], self._tables[segs[i].name])
-                            for i in order]
+        by_level: dict[int, list[int]] = {}
+        for i, m in enumerate(segs):
+            by_level.setdefault(m.level, []).append(i)
+        views: list[_LevelView] = []
+        for level in sorted(by_level):
+            idxs = by_level[level]
+            ranges = [_meta_range(segs[i]) for i in idxs]
+            view = None
+            if level >= 1 and not self._flat_reads and all(ranges):
+                ordered = sorted(zip(ranges, idxs), key=lambda t: t[0])
+                disjoint = all(ordered[j][0][0] > ordered[j - 1][0][1]
+                               for j in range(1, len(ordered)))
+                if disjoint:
+                    view = _LevelView(
+                        level, True,
+                        [(segs[i], self._tables[segs[i].name])
+                         for _, i in ordered],
+                        mins=[r[0] for r, _ in ordered],
+                        maxs=[r[1] for r, _ in ordered])
+            if view is None:
+                # L0, legacy metadata, or flat_reads: probe every
+                # segment newest-first (later manifest position = newer)
+                view = _LevelView(
+                    level, False,
+                    [(segs[i], self._tables[segs[i].name])
+                     for i in reversed(idxs)])
+            views.append(view)
+        self._levels = views
+        self._read_order = [e for v in views for e in v.entries]
 
     def _recover(self) -> None:
-        """Manifest → orphan sweep → open segments → WAL replay →
-        truncate the uncommitted/corrupt tail (see module docstring)."""
+        """Manifest → paused-merge validation → orphan sweep → open
+        segments → WAL replay → truncate the uncommitted/corrupt tail
+        (see module docstring)."""
         with obs.span("lsm.recover") as sp:
             self._recover_impl()
             sp.set(waves=self._epoch, dropped=self.recovery_dropped)
 
     def _recover_impl(self) -> None:
         m = MF.load(self.dirname)
+        st = m.compaction
+        if st is not None:
+            # a paused merge is only resumable if its inputs are still
+            # live and every recorded output file exists; anything else
+            # (defensive — no crash point produces it) is abandoned and
+            # the sweep below reclaims the output files
+            names = set(m.segment_names())
+            ok = (all(n in names for n in st.inputs)
+                  and all(os.path.exists(os.path.join(self.dirname, o.name))
+                          for o in st.outputs))
+            if not ok:
+                m.compaction = None
         MF.sweep_orphans(self.dirname, m)
         self._manifest = m
         self._tables = {meta.name: self._open_table(meta.name)
@@ -222,57 +365,86 @@ class DurableKV(KVEngine):
             self._mem[key] = TOMBSTONE
 
     def get(self, key: bytes) -> Optional[bytes]:
-        """Point lookup: memtable, then segments level by level (newest
-        first within a level).
+        """Point lookup: memtable, then levels in order — a binary
+        search over the partition ranges on a partitioned level (≤ 1
+        segment consulted), newest-first probe-all on level 0 / legacy
+        levels.
 
-        Complexity: O(1) memtable hit; otherwise the key is bloom-hashed
-        **once** and each of the S live segments costs k bit-probes — a
-        negative filter skips the segment entirely (counted as
-        ``bloom_neg`` in :meth:`op_counts`) — plus, for the segments that
-        may contain it, O(log n_index) bisect + one ≤ SPARSE_EVERY-record
+        Complexity: O(1) memtable hit; otherwise O(log partitions) per
+        partitioned level and O(segments) on level 0.  Every consulted
+        segment counts as ``seg_probe`` in :meth:`op_counts`; the key is
+        bloom-hashed **once** and a negative filter skips the segment
+        (``bloom_neg``) before any of its bytes are touched.  Surviving
+        probes cost O(log n_index) bisect + one ≤ SPARSE_EVERY-record
         block (served from the shared block cache when attached:
-        ``cache_hit``/``cache_miss`` counters).  A miss over an all-bloom
-        store therefore touches **no** segment bytes at ~0.8% FPR."""
+        ``cache_hit``/``cache_miss`` counters)."""
         self._count("get")
         with self._lock:
             v = self._mem.get(key)
             if v is not None:
                 return None if v is TOMBSTONE else v  # type: ignore[return-value]
             hashes: tuple[int, int] | None = None
-            for meta, seg in self._read_order:
-                if seg.bloom is not None:
-                    if hashes is None:
-                        hashes = bloom_hash_pair(key)
-                    if not seg.bloom.may_contain_hashes(*hashes):
-                        self._count("bloom_neg")
+            for view in self._levels:
+                if view.partitioned:
+                    i = bisect.bisect_right(view.mins, key) - 1
+                    if i < 0 or key > view.maxs[i]:
                         continue
-                v = seg.get(key)
-                if v is TOMBSTONE:
-                    return None
-                if v is not MISSING:
-                    return v  # type: ignore[return-value]
+                    cands = (view.entries[i],)
+                else:
+                    cands = view.entries
+                for meta, seg in cands:
+                    self._count("seg_probe")
+                    if seg.bloom is not None:
+                        if hashes is None:
+                            hashes = bloom_hash_pair(key)
+                        if not seg.bloom.may_contain_hashes(*hashes):
+                            self._count("bloom_neg")
+                            continue
+                    v = seg.get(key)
+                    if v is TOMBSTONE:
+                        return None
+                    if v is not MISSING:
+                        return v  # type: ignore[return-value]
         return None
 
     def scan(self, prefix: bytes) -> Iterator[tuple[bytes, bytes]]:
         """Ordered iteration over live ``prefix``-keyed pairs (tombstones
-        resolved).  Complexity: O(hits · S) merge over every segment's
-        prefix range plus the memtable — scans bypass bloom filters and
-        the block cache by design (range reads would pollute it)."""
+        resolved): a k-way merge over the memtable and only the segments
+        whose key range can intersect the prefix (``scan_skip`` counts
+        the pruned ones).  First occurrence of a key in merge-rank order
+        — memtable, then levels ascending, newest-first within level 0 —
+        wins; partitioned levels are disjoint so rank among their
+        partitions cannot matter.  Scans bypass bloom filters and the
+        block cache by design (range reads would pollute it)."""
         self._count("scan")
+        plen = len(prefix)
         with self._lock:
-            merged: dict[bytes, object] = {}
-            # oldest version first so newer levels overwrite: reversed
-            # probe order == deepest level upward, oldest-first within
-            for _, seg in reversed(self._read_order):
-                for k, v in seg.scan(prefix):
-                    merged[k] = v
-            for k, v in self._mem.items():
-                if k.startswith(prefix):
-                    merged[k] = v
-        for k in sorted(merged):
-            v = merged[k]
-            if v is not TOMBSTONE:
-                yield k, v  # type: ignore[misc]
+            runs: list[list[tuple[bytes, int, object]]] = []
+            mem = sorted((k, v) for k, v in self._mem.items()
+                         if k.startswith(prefix))
+            runs.append([(k, 0, v) for k, v in mem])
+            rank = 1
+            for view in self._levels:
+                for meta, seg in view.entries:
+                    r = _meta_range(meta)
+                    if r is not None and (
+                            r[1] < prefix or (plen and r[0][:plen] > prefix)):
+                        self._count("scan_skip")
+                        continue
+                    runs.append([(k, rank, v) for k, v in seg.scan(prefix)])
+                    rank += 1
+            out: list[tuple[bytes, bytes]] = []
+            last: bytes | None = None
+            # (key, rank) pairs are unique across runs, so the merge
+            # never compares values; the lowest rank for a key comes
+            # first and shadows the rest
+            for k, _, v in heapq.merge(*runs):
+                if k == last:
+                    continue
+                last = k
+                if v is not TOMBSTONE:
+                    out.append((k, v))  # type: ignore[arg-type]
+        yield from out
 
     def flush(self) -> None:
         """KVEngine hygiene hook (offline pipeline batches): commit the
@@ -284,9 +456,10 @@ class DurableKV(KVEngine):
     # group commit + spill (the wave boundary)
     # ------------------------------------------------------------------
     def commit_epoch(self, epoch: int) -> None:
-        """Group-commit the buffered wave at ``epoch`` (monotone), then
-        spill the memtable if over its limit and run any leveled
-        compaction the spill triggers."""
+        """Group-commit the buffered wave at ``epoch`` (monotone), spill
+        the memtable if over its limit, then run compaction up to the
+        per-wave byte budget (resuming any merge a previous wave
+        paused)."""
         with self._lock:
             # monotone: a lagging engine sharing this store (e.g. a
             # device mirror whose own counter trails the host's) must
@@ -307,7 +480,7 @@ class DurableKV(KVEngine):
             self._inval_buf.clear()
             if len(self._mem) >= self._limit:
                 self._spill_locked()
-                self._maybe_compact_locked()
+            self._maybe_compact_locked()
 
     def spill(self) -> None:
         """Commit the open wave and force the memtable to a level-0
@@ -357,80 +530,239 @@ class DurableKV(KVEngine):
         self._wal.reset()
 
     # ------------------------------------------------------------------
-    # leveled compaction
+    # leveled compaction: partitioned, budgeted, resumable
     # ------------------------------------------------------------------
-    def _maybe_compact_locked(self) -> None:
-        """Size-ratio trigger: merge any level holding ≥ ``level_ratio``
-        segments into the next level, cascading until no level is over
-        the trigger.  Each merge touches only the triggering level's
-        bytes — never the whole store."""
-        changed = True
-        while changed:
-            changed = False
-            for level in sorted(self._manifest.level_counts()):
-                if self._manifest.level_counts()[level] >= self._ratio:
-                    self._compact_level_locked(level)
-                    changed = True
-                    break
+    def _cap_bytes(self, level: int) -> int:
+        """Byte capacity of ``level``: ``target · ratio^level``."""
+        return self._target * (self._ratio ** level)
 
-    def _compact_level_locked(self, level: int) -> None:
-        """Merge level ``level``'s whole run into one segment at
-        ``level + 1``.  O(bytes of this level).  Tombstones drop only if
-        no deeper level remains to shadow (the merge output is then the
-        oldest data in the store).  Crash-safe: the merged segment only
-        becomes live at the manifest swap, and the input files are
-        deleted only after it."""
-        inputs = [m for m in self._manifest.segments if m.level == level]
-        if not inputs:
-            return
-        self._count("compact_level")
-        with obs.span("lsm.compact_level", level=level,
-                      segments=len(inputs)):
-            self._compact_level_impl(level, inputs)
+    def _level_bytes(self) -> dict[int, int]:
+        lb: dict[int, int] = {}
+        for m in self._manifest.segments:
+            lb[m.level] = lb.get(m.level, 0) + m.bytes
+        return lb
 
-    def _compact_level_impl(self, level: int, inputs) -> None:
-        merged: dict[bytes, object] = {}
-        for meta in inputs:                     # oldest → newest wins
-            for k, v in self._tables[meta.name].iter_all():
-                merged[k] = v
-        # deeper data (level > this one) is strictly older: a tombstone
-        # must survive the merge to keep shadowing it
-        has_older = any(m.level > level for m in self._manifest.segments)
-        if has_older:
-            items = sorted(merged.items())
+    def _pick_trigger_locked(self) -> int | None:
+        """→ the shallowest level owing a merge: L0 by segment count,
+        levels ≥ 1 by byte capacity; None when no level is over."""
+        counts = self._manifest.level_counts()
+        if counts.get(0, 0) >= self._ratio:
+            return 0
+        lb = self._level_bytes()
+        for level in sorted(lb):
+            if level >= 1 and lb[level] > self._cap_bytes(level):
+                return level
+        return None
+
+    def _begin_compaction_locked(self, level: int) -> MF.CompactionState:
+        """Freeze one merge's shape: inputs (victim + range-overlapping
+        next-level partitions), output level, and whether tombstones may
+        drop — recorded once so a later resume cannot change semantics."""
+        segs = self._manifest.segments
+        part = {v.level: v.partitioned for v in self._levels}
+        src = [m for m in segs if m.level == level]
+        if level >= 1 and part.get(level, False):
+            # one victim partition: the largest pays the debt down
+            # fastest; peers are disjoint so they can stay put
+            inputs = [max(src, key=lambda m: (m.bytes, m.name))]
         else:
-            items = sorted((k, v) for k, v in merged.items()
-                           if v is not TOMBSTONE)
-        keep = [m for m in self._manifest.segments if m.level != level]
-        if items:
-            name = self._manifest.alloc_segment()
-            stats = write_sstable(os.path.join(self.dirname, name), items,
-                                  sync=self._sync == "fsync",
-                                  bloom_bits_per_key=self._bloom_bits)
-            keep.append(MF.SegmentMeta(
-                name=name, level=level + 1, records=stats.n_records,
-                bytes=stats.file_bytes,
-                min_key=stats.min_key.hex(), max_key=stats.max_key.hex(),
-                bloom_k=stats.bloom_k, bloom_bits=stats.bloom_nbits))
-        self._manifest.segments = keep
+            # L0 ranges overlap (and a legacy level's may): the whole
+            # run must move together or shadowing order would invert
+            inputs = list(src)
+        out_level = level + 1
+        nxt = [m for m in segs if m.level == out_level]
+        if nxt:
+            if part.get(out_level, False):
+                ranges = [_meta_range(m) for m in inputs]
+                if all(ranges):
+                    lo = min(r[0] for r in ranges)
+                    hi = max(r[1] for r in ranges)
+                    overlap = [m for m in nxt
+                               if not (bytes.fromhex(m.max_key) < lo
+                                       or bytes.fromhex(m.min_key) > hi)]
+                else:
+                    overlap = list(nxt)     # unknown span: take everything
+            else:
+                # merging INTO an unpartitioned level partitions it,
+                # but only if the whole level is rewritten
+                overlap = list(nxt)
+            inputs = inputs + overlap
+        drop = not any(m.level > out_level for m in segs)
+        return MF.CompactionState(
+            level=level, out_level=out_level,
+            inputs=[m.name for m in inputs], outputs=[],
+            next_key="", drop_tombstones=drop)
+
+    def _merge_inputs_locked(self, st: MF.CompactionState
+                             ) -> list[tuple[bytes, object]]:
+        """Re-derive the merge's sorted item stream from its live inputs
+        (deterministic, so a resume reproduces the exact same stream)."""
+        pos = {m.name: i for i, m in enumerate(self._manifest.segments)}
+        names = set(st.inputs)
+        metas = [m for m in self._manifest.segments if m.name in names]
+        merged: dict[bytes, object] = {}
+        # oldest version first so newer overwrites: deeper level first,
+        # then chronological manifest position within a level
+        for m in sorted(metas, key=lambda m: (-m.level, pos[m.name])):
+            for k, v in self._tables[m.name].iter_all():
+                merged[k] = v
+        if st.drop_tombstones:
+            return sorted((k, v) for k, v in merged.items()
+                          if v is not TOMBSTONE)
+        return sorted(merged.items())
+
+    def _partition_spans(self, items: list) -> Iterator[tuple[int, int]]:
+        """Split points: each span is ≥ 1 record and crosses the target
+        size by at most one record (estimated as klen + vlen + 8)."""
+        i, n = 0, len(items)
+        while i < n:
+            est, j = 0, i
+            while j < n and (j == i or est < self._target):
+                k, v = items[j]
+                est += len(k) + (len(v) if isinstance(v, bytes) else 0) + 8
+                j += 1
+            yield i, j
+            i = j
+
+    def _write_partition_locked(self, items: list, out_level: int
+                                ) -> MF.SegmentMeta:
+        name = self._manifest.alloc_segment()
+        stats = write_sstable(os.path.join(self.dirname, name), items,
+                              sync=self._sync == "fsync",
+                              bloom_bits_per_key=self._bloom_bits)
+        return MF.SegmentMeta(
+            name=name, level=out_level, records=stats.n_records,
+            bytes=stats.file_bytes,
+            min_key=stats.min_key.hex(), max_key=stats.max_key.hex(),
+            bloom_k=stats.bloom_k, bloom_bits=stats.bloom_nbits)
+
+    def _advance_compaction_locked(self, st: MF.CompactionState,
+                                   budget_left: int | None) -> int:
+        """Run one merge until done or out of budget; → bytes written.
+
+        On pause, the completed partitions + resume key go into the
+        manifest atomically (``compaction`` field) while the inputs stay
+        live — a crash either resumes from exactly here or, if it beat
+        the manifest swap, re-merges from the previous pause point and
+        the unrecorded partition files are swept as orphans."""
+        items = self._merge_inputs_locked(st)
+        if st.next_key:
+            resume = bytes.fromhex(st.next_key)
+            items = [kv for kv in items if kv[0] >= resume]
+        spent = 0
+        for i, j in self._partition_spans(items):
+            meta = self._write_partition_locked(items[i:j], st.out_level)
+            st.outputs.append(meta)
+            spent += meta.bytes
+            if j < len(items) and budget_left is not None \
+                    and spent >= budget_left:
+                st.next_key = items[j][0].hex()
+                self._manifest.compaction = st
+                self._count("compact_pause")
+                self._store_manifest_locked()
+                return spent
+        self._finalize_compaction_locked(st)
+        return spent
+
+    def _finalize_compaction_locked(self, st: MF.CompactionState) -> None:
+        """Publish the merge: outputs become live, inputs are deleted —
+        one atomic manifest swap is the commit point."""
+        self._count("compact_level")
+        names = set(st.inputs)
+        keep = [m for m in self._manifest.segments if m.name not in names]
+        self._manifest.segments = keep + list(st.outputs)
+        self._manifest.compaction = None
         self._store_manifest_locked()
-        for meta in inputs:
-            self._tables.pop(meta.name).close()
+        for name in st.inputs:
+            table = self._tables.pop(name, None)
+            if table is not None:
+                table.close()
+            try:
+                os.remove(os.path.join(self.dirname, name))
+            except FileNotFoundError:
+                pass
+        for meta in st.outputs:
+            self._tables[meta.name] = self._open_table(meta.name)
+        self._rebuild_read_order()
+
+    def _maybe_compact_locked(self) -> None:
+        """Pay down compaction debt up to the per-wave byte budget:
+        resume any paused merge first, then keep servicing triggers
+        (L0 count, then byte-capacity overflow shallowest-first) until
+        the debt or the budget is exhausted.  Unbudgeted (0), this runs
+        every owed merge to completion — each merge still only touches
+        its victim + overlap, never the whole store."""
+        budget = self._budget
+        spent = 0
+        while True:
+            st = self._manifest.compaction
+            if st is None:
+                level = self._pick_trigger_locked()
+                if level is None:
+                    break
+                st = self._begin_compaction_locked(level)
+                self._manifest.compaction = st  # durable only at a pause
+            left = None if budget == 0 else max(1, budget - spent)
+            with obs.span("lsm.compact_level", level=st.level,
+                          segments=len(st.inputs),
+                          resumed=bool(st.next_key)):
+                spent += self._advance_compaction_locked(st, left)
+            if self._manifest.compaction is not None:
+                break                           # paused on budget
+            if budget and spent >= budget:
+                break
+        self.last_compact_bytes = spent
+
+    def compact_debt(self) -> int:
+        """Outstanding merge work, in bytes — the backpressure gauge.
+
+        Sums the over-capacity bytes of every level (all of L0 when its
+        count trigger is armed) plus the unwritten remainder of a paused
+        merge.  0 ⇔ no merge is owed; the serving tier reads this
+        through ``QueryEngine.stats`` / ``stats_snapshot()`` as
+        ``compact_debt``."""
+        with self._lock:
+            lb = self._level_bytes()
+            counts = self._manifest.level_counts()
+            debt = 0
+            if counts.get(0, 0) >= self._ratio:
+                debt += lb.get(0, 0)
+            for level, b in lb.items():
+                if level >= 1:
+                    debt += max(0, b - self._cap_bytes(level))
+            st = self._manifest.compaction
+            if st is not None:
+                names = set(st.inputs)
+                in_bytes = sum(m.bytes for m in self._manifest.segments
+                               if m.name in names)
+                done = sum(o.bytes for o in st.outputs)
+                debt += max(0, in_bytes - done)
+            return debt
+
+    def _abandon_compaction_locked(self) -> None:
+        """Drop a paused merge (major compaction supersedes it): the
+        recorded outputs are redundant copies of still-live inputs, so
+        deleting them loses nothing."""
+        st = self._manifest.compaction
+        if st is None:
+            return
+        self._count("compact_abandon")
+        self._manifest.compaction = None
+        for meta in st.outputs:
             try:
                 os.remove(os.path.join(self.dirname, meta.name))
             except FileNotFoundError:
                 pass
-        if items:
-            self._tables[name] = self._open_table(name)
-        self._rebuild_read_order()
+        self._store_manifest_locked()
 
     def compact(self) -> None:
-        """**Major** compaction: commit + spill the open tail, then merge
-        *every* level into one bottom segment, dropping all tombstones
+        """**Major** compaction: commit + spill the open tail, abandon
+        any paused merge, then merge *every* level into the bottom level
+        (partitioned at the segment target), dropping all tombstones
         (the merge covers the whole keyspace).  O(total bytes) — the
-        explicit maintenance/benchmark operation; the online trigger path
-        (:meth:`commit_epoch` → ``_maybe_compact_locked``) only ever
-        merges one level at a time."""
+        explicit maintenance/benchmark operation; the online trigger
+        path (:meth:`commit_epoch` → ``_maybe_compact_locked``) only
+        ever merges one victim + overlap at a time."""
         with self._lock:
             # segments may only ever hold committed records (recovery
             # trusts them unconditionally) — close the open wave first
@@ -440,7 +772,8 @@ class DurableKV(KVEngine):
             self._compact_all_locked()
 
     def _compact_all_locked(self) -> None:
-        """Full merge of all segments into one at the bottom level."""
+        """Full merge of all segments into partitions at the bottom."""
+        self._abandon_compaction_locked()
         if not self._manifest.segments:
             return
         with obs.span("lsm.compact_major",
@@ -455,18 +788,17 @@ class DurableKV(KVEngine):
         items = sorted((k, v) for k, v in merged.items() if v is not TOMBSTONE)
         out_level = max(1, max(m.level for m in self._manifest.segments))
         old = list(self._manifest.segments)
-        if items:
-            name = self._manifest.alloc_segment()
-            stats = write_sstable(os.path.join(self.dirname, name), items,
-                                  sync=self._sync == "fsync",
-                                  bloom_bits_per_key=self._bloom_bits)
-            self._manifest.segments = [MF.SegmentMeta(
-                name=name, level=out_level, records=stats.n_records,
-                bytes=stats.file_bytes,
-                min_key=stats.min_key.hex(), max_key=stats.max_key.hex(),
-                bloom_k=stats.bloom_k, bloom_bits=stats.bloom_nbits)]
-        else:
-            self._manifest.segments = []
+        outs = [self._write_partition_locked(items[i:j], out_level)
+                for i, j in self._partition_spans(items)]
+        # a major compact pays off ALL debt: sink the run to the first
+        # level whose byte capacity holds it (real bytes are only known
+        # post-write; the level lives in the manifest, not the file)
+        total = sum(m.bytes for m in outs)
+        while total > self._cap_bytes(out_level):
+            out_level += 1
+        for m in outs:
+            m.level = out_level
+        self._manifest.segments = outs
         self._store_manifest_locked()
         for meta in old:
             self._tables.pop(meta.name).close()
@@ -474,8 +806,8 @@ class DurableKV(KVEngine):
                 os.remove(os.path.join(self.dirname, meta.name))
             except FileNotFoundError:
                 pass
-        if items:
-            self._tables[name] = self._open_table(name)
+        for meta in outs:
+            self._tables[meta.name] = self._open_table(meta.name)
         self._rebuild_read_order()
 
     def level_counts(self) -> dict[int, int]:
@@ -483,6 +815,13 @@ class DurableKV(KVEngine):
         (tests and the ``wikikv_durable_cold`` benchmark assert on it)."""
         with self._lock:
             return self._manifest.level_counts()
+
+    def set_flat_reads(self, flag: bool) -> None:
+        """Toggle the benchmark A/B switch: True probes every segment of
+        every level (the pre-partitioned read path) on the same files."""
+        with self._lock:
+            self._flat_reads = bool(flag)
+            self._rebuild_read_order()
 
     # ------------------------------------------------------------------
     # epoch / invalidation journal (device rehydration contract)
@@ -524,7 +863,9 @@ class DurableKV(KVEngine):
     # ------------------------------------------------------------------
     def close(self) -> None:
         """Clean shutdown: commit any buffered tail so a reopen is
-        byte-identical, then release file handles (idempotent)."""
+        byte-identical, then release file handles (idempotent).  A
+        paused merge stays paused — its manifest state survives and the
+        reopened store resumes it."""
         if self._closed:
             return
         with self._lock:
@@ -543,7 +884,9 @@ def durable_engine_factory(root: str, memtable_limit: int = 4096,
                            sync: str | None = None,
                            level_ratio: int | None = None,
                            bloom_bits: int | None = None,
-                           block_cache: BlockCache | None = None
+                           block_cache: BlockCache | None = None,
+                           segment_target_bytes: int | None = None,
+                           compact_budget_bytes: int | None = None
                            ) -> Callable[[int], DurableKV]:
     """Engine factory for ``ShardedPathStore``: shard *i* gets its own
     WAL + segment directory ``<root>/shard_<i>`` — per-shard group commit
@@ -554,7 +897,9 @@ def durable_engine_factory(root: str, memtable_limit: int = 4096,
         return DurableKV(os.path.join(root, f"shard_{i:02d}"),
                          memtable_limit=memtable_limit, sync=sync,
                          level_ratio=level_ratio, bloom_bits=bloom_bits,
-                         block_cache=block_cache)
+                         block_cache=block_cache,
+                         segment_target_bytes=segment_target_bytes,
+                         compact_budget_bytes=compact_budget_bytes)
     return make
 
 
@@ -566,14 +911,17 @@ def open_durable_store(root: str, n_shards: int | None = None,
                        memtable_limit: int = 4096, sync: str | None = None,
                        level_ratio: int | None = None,
                        bloom_bits: int | None = None,
-                       block_cache_bytes: int | None = None):
+                       block_cache_bytes: int | None = None,
+                       segment_target_bytes: int | None = None,
+                       compact_budget_bytes: int | None = None):
     """Open (or create) a durable path store rooted at ``root``.
 
     ``n_shards == 1`` → a ``PathStore`` over one ``DurableKV``;
     otherwise a digest-range ``ShardedPathStore`` with one WAL+segment
     directory per shard.  Reopening an existing root recovers from disk
     — zero re-ingestion.  ``level_ratio`` / ``bloom_bits`` /
-    ``block_cache_bytes`` default to their ``REPRO_*`` env knobs (see
+    ``block_cache_bytes`` / ``segment_target_bytes`` /
+    ``compact_budget_bytes`` default to their ``REPRO_*`` env knobs (see
     docs/STORAGE.md); the block cache is ONE shared LRU across all
     shards, so the byte budget is store-global.
 
@@ -614,12 +962,15 @@ def open_durable_store(root: str, n_shards: int | None = None,
     if n_shards <= 1:
         return PathStore(DurableKV(root, memtable_limit=memtable_limit,
                                    sync=sync, level_ratio=level_ratio,
-                                   bloom_bits=bloom_bits, block_cache=cache),
+                                   bloom_bits=bloom_bits, block_cache=cache,
+                                   segment_target_bytes=segment_target_bytes,
+                                   compact_budget_bytes=compact_budget_bytes),
                          depth_budget=depth_budget)
     return ShardedPathStore(
         n_shards=n_shards,
         engine_factory=durable_engine_factory(
             root, memtable_limit=memtable_limit, sync=sync,
             level_ratio=level_ratio, bloom_bits=bloom_bits,
-            block_cache=cache),
+            block_cache=cache, segment_target_bytes=segment_target_bytes,
+            compact_budget_bytes=compact_budget_bytes),
         depth_budget=depth_budget)

@@ -10,27 +10,38 @@ The manifest carries everything recovery needs besides the WAL itself:
                       shadow earlier ones; across levels, a lower level
                       always shadows a higher one (data only ever moves
                       downward, so every version in level L is newer than
-                      any version of the same key below it).
-* ``next_seg``      — monotone id allocator (never reused, so a crashed
-                      spill's or merge's orphan file can never collide
-                      with a live one — and block-cache keys never alias)
+                      any version of the same key below it).  Levels ≥ 1
+                      written by partitioned compaction are key-range
+                      disjoint, so shadowing within them never arises.
+* ``next_seg``      — monotone id allocator (never reused within a
+                      manifest lineage, so a crashed spill's or merge's
+                      orphan file can never collide with a live one)
 * ``epoch``         — last committed write epoch at manifest-write time
 * ``device_epoch``  — epoch the device tier had applied when last marked
 * ``pending_inval`` — journaled invalidation paths committed after
                       ``device_epoch`` (survives WAL truncation at spill
                       so device rehydration stays exact)
+* ``compaction``    — in-flight resumable merge state (format 3), or
+                      null when no merge is paused.  Inputs remain live
+                      in ``segments`` for readers; ``outputs`` are
+                      durable partition files not yet published.  A
+                      budget-paused merge persists this state so a crash
+                      resumes from ``next_key`` instead of redoing (or
+                      worse, leaking) completed partitions.
 
-Schema versions: format 2 (current) stores ``segments`` as objects with
-``level`` and the bloom/key-range summary; format 1 (PR 3) stored bare
-file names.  ``load`` accepts both — a PR-3 manifest opens with every
-segment at level 0 and unknown stats, and the first manifest write
-(spill or compaction) migrates it to format 2 on disk.  Round-trip
-compatibility is tested in tests/test_storage.py.
+Schema versions: format 3 (current) adds the ``compaction`` field;
+format 2 stored ``segments`` as objects with ``level`` and the
+bloom/key-range summary; format 1 (PR 3) stored bare file names.
+``load`` accepts all three — a PR-3 manifest opens with every segment at
+level 0 and unknown stats, a format-2 manifest opens with no pending
+merge, and the first manifest write migrates either to format 3 on
+disk.  Round-trip compatibility is tested in tests/test_storage.py.
 
 A crash between segment write and manifest swap leaves an unreferenced
 ``seg_*.seg`` file; ``load`` reports live names so the engine can sweep
-orphans.  A crash mid-rename is impossible to observe: ``os.replace`` is
-atomic on POSIX.
+orphans.  Files named by ``compaction.outputs`` are *not* orphans —
+they are paid-for merge work a resume will publish.  A crash mid-rename
+is impossible to observe: ``os.replace`` is atomic on POSIX.
 """
 from __future__ import annotations
 
@@ -38,10 +49,13 @@ import json
 import os
 from dataclasses import asdict, dataclass, field
 
+from . import failpoints as FP
+
 MANIFEST_NAME = "MANIFEST.json"
 
-#: current manifest schema version (1 = PR-3 flat names, 2 = leveled)
-FORMAT = 2
+#: current manifest schema version
+#: (1 = PR-3 flat names, 2 = leveled, 3 = + resumable compaction state)
+FORMAT = 3
 
 
 @dataclass
@@ -64,12 +78,34 @@ class SegmentMeta:
 
 
 @dataclass
+class CompactionState:
+    """A paused (budget-throttled) merge, recorded crash-safely.
+
+    ``inputs`` are segment names still live in ``segments``; ``outputs``
+    are completed, fsynced partition files at ``out_level`` that the
+    finalize step will publish atomically.  ``next_key`` (hex) is the
+    first merged key not yet written — resume re-merges the inputs and
+    skips everything below it.  ``drop_tombstones`` is decided once at
+    merge start (whether any level deeper than ``out_level`` remains)
+    and frozen here so a resume after an unrelated spill cannot change
+    the merge's semantics mid-flight."""
+
+    level: int
+    out_level: int
+    inputs: list[str] = field(default_factory=list)
+    outputs: list[SegmentMeta] = field(default_factory=list)
+    next_key: str = ""
+    drop_tombstones: bool = False
+
+
+@dataclass
 class Manifest:
     segments: list[SegmentMeta] = field(default_factory=list)
     next_seg: int = 1
     epoch: int = 0
     device_epoch: int = 0
     pending_inval: list[str] = field(default_factory=list)
+    compaction: CompactionState | None = None
 
     def alloc_segment(self) -> str:
         """Reserve the next (never-reused) segment file name."""
@@ -105,8 +141,22 @@ def _meta_from_json(o: object) -> SegmentMeta:
     )
 
 
+def _compaction_from_json(o: object) -> CompactionState | None:
+    if o is None:
+        return None
+    assert isinstance(o, dict)
+    return CompactionState(
+        level=int(o["level"]),
+        out_level=int(o["out_level"]),
+        inputs=[str(n) for n in o.get("inputs", [])],
+        outputs=[_meta_from_json(s) for s in o.get("outputs", [])],
+        next_key=str(o.get("next_key", "")),
+        drop_tombstones=bool(o.get("drop_tombstones", False)),
+    )
+
+
 def load(dirname: str) -> Manifest:
-    """Read ``MANIFEST.json`` (either schema version); empty manifest if
+    """Read ``MANIFEST.json`` (any schema version); empty manifest if
     the file does not exist (a fresh store directory)."""
     path = os.path.join(dirname, MANIFEST_NAME)
     if not os.path.exists(path):
@@ -119,13 +169,14 @@ def load(dirname: str) -> Manifest:
         epoch=int(o.get("epoch", 0)),
         device_epoch=int(o.get("device_epoch", 0)),
         pending_inval=list(o.get("pending_inval", [])),
+        compaction=_compaction_from_json(o.get("compaction")),
     )
 
 
 def store(dirname: str, m: Manifest, sync: bool = True) -> None:
     """Atomic commit: serialize to ``MANIFEST.json.tmp``, fsync, rename.
-    Always writes the current (format 2, leveled) schema — this is where
-    a PR-3 manifest migrates."""
+    Always writes the current (format 3) schema — this is where older
+    manifests migrate."""
     path = os.path.join(dirname, MANIFEST_NAME)
     tmp = path + ".tmp"
     payload = json.dumps({
@@ -135,12 +186,15 @@ def store(dirname: str, m: Manifest, sync: bool = True) -> None:
         "epoch": m.epoch,
         "device_epoch": m.device_epoch,
         "pending_inval": m.pending_inval,
+        "compaction": None if m.compaction is None else asdict(m.compaction),
     }, sort_keys=True)
     with open(tmp, "w", encoding="utf-8") as f:
-        f.write(payload)
+        FP.write("manifest.write", f, payload)
         f.flush()
         if sync:
+            FP.hit("manifest.fsync")
             os.fsync(f.fileno())
+    FP.hit("manifest.replace")
     os.replace(tmp, path)
     if sync:
         # the rename itself is directory metadata: without this fsync a
@@ -152,8 +206,12 @@ def store(dirname: str, m: Manifest, sync: bool = True) -> None:
 
 def sweep_orphans(dirname: str, m: Manifest) -> list[str]:
     """Delete ``seg_*.seg`` files not referenced by the manifest (debris
-    from a crash between segment/merge write and manifest swap)."""
+    from a crash between segment/merge write and manifest swap).  A
+    paused merge's output partitions are referenced by ``compaction``
+    rather than ``segments`` — they are live work, not debris."""
     live = set(m.segment_names())
+    if m.compaction is not None:
+        live.update(o.name for o in m.compaction.outputs)
     removed = []
     for name in sorted(os.listdir(dirname)):
         if name.endswith(".seg") and name not in live:

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import bisect
 import hashlib
+import itertools
 import mmap
 import os
 import struct
@@ -43,6 +44,12 @@ import threading
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, Iterator, Optional
+
+from . import failpoints as FP
+
+#: process-unique SSTable open ids — the generation component of block
+#: cache keys (see :class:`BlockCache`)
+_OPEN_IDS = itertools.count(1)
 
 MAGIC = b"WSEG1\n"
 END_MAGIC_V1 = b"WEND1\n"
@@ -133,22 +140,29 @@ class BlockCache:
     One instance is shared across every shard of a ``ShardedPathStore``
     (``open_durable_store`` creates it), so the budget is global: hot
     shards can use more than their share.  Keys are
-    ``(segment_path, block_index)`` — segment names are never reused
-    (``Manifest.next_seg`` is monotone), so a deleted segment's entries
-    can never alias a live one's; they are dropped eagerly on segment
-    close and age out via LRU otherwise.  Thread-safe (its own lock:
-    per-shard ``DurableKV`` locks do not protect cross-shard sharing).
+    ``(segment_path, file_id, block_index)`` where ``file_id`` is a
+    process-unique id minted per SSTable open.  ``Manifest.next_seg``
+    keeps names unique *within* one manifest lineage, but a cache can
+    outlive a lineage (a store directory recreated after a crash test,
+    or a restore-from-backup, re-allocates ``seg_000001.seg`` at the
+    same path) — and inode numbers can be recycled by the filesystem,
+    so neither path nor inode distinguishes segment generations.  The
+    open id does: a stale parsed block can never be served for a
+    replacement file.
+    Entries are dropped eagerly on segment close and age out via LRU
+    otherwise.  Thread-safe (its own lock: per-shard ``DurableKV`` locks
+    do not protect cross-shard sharing).
     """
 
     def __init__(self, capacity_bytes: int = 8 << 20):
         self.capacity = capacity_bytes
         self._lock = threading.Lock()
-        self._d: "OrderedDict[tuple[str, int], tuple[list, int]]" = OrderedDict()
+        self._d: "OrderedDict[tuple[str, int, int], tuple[list, int]]" = OrderedDict()
         self._bytes = 0
         self.hits = 0
         self.misses = 0
 
-    def get(self, key: tuple[str, int]):
+    def get(self, key: tuple[str, int, int]):
         """→ cached parsed block (list of ``(key, value)``), or None."""
         with self._lock:
             ent = self._d.get(key)
@@ -159,7 +173,7 @@ class BlockCache:
             self.hits += 1
             return ent[0]
 
-    def put(self, key: tuple[str, int], block: list, nbytes: int) -> None:
+    def put(self, key: tuple[str, int, int], block: list, nbytes: int) -> None:
         """Insert a parsed block charged at ``nbytes``; evicts LRU entries
         until the budget holds.  A block larger than the whole budget is
         simply not cached."""
@@ -244,9 +258,10 @@ def write_sstable(path: str, items: list[tuple[bytes, object]],
         buf += _FOOTER_V1.pack(index_off, len(index), len(items)) + END_MAGIC_V1
         bloom_k = bloom_nbits = 0
     with open(path, "wb") as f:
-        f.write(bytes(buf))
+        FP.write("segment.write", f, bytes(buf))
         f.flush()
         if sync:
+            FP.hit("segment.fsync")
             os.fsync(f.fileno())
     if sync:
         # the new file's directory entry must hit disk before the
@@ -279,6 +294,11 @@ class SSTable:
         self._cache = cache
         self._stat = stat
         self._f = open(path, "rb")
+        # per-open cache identity: a recreated file at the same path (a
+        # new store generation) must never hit the old file's blocks,
+        # and inode numbers can be recycled — a process-unique open id
+        # cannot collide within the (in-process) cache's lifetime
+        self._file_id = next(_OPEN_IDS)
         try:
             self._mm = mmap.mmap(self._f.fileno(), 0, access=mmap.ACCESS_READ)
         except ValueError:          # zero-length file cannot be mmapped
@@ -337,7 +357,7 @@ class SSTable:
     def _load_block(self, block: int) -> list[tuple[bytes, object]]:
         """Parse (or fetch from the cache) one index block — the ≤
         SPARSE_EVERY records between two sparse-index entries."""
-        ck = (self.path, block)
+        ck = (self.path, self._file_id, block)
         cached = self._cache.get(ck)        # type: ignore[union-attr]
         if cached is not None:
             if self._stat:

@@ -38,6 +38,7 @@ import zlib
 from dataclasses import dataclass
 
 from .. import obs
+from . import failpoints as FP
 
 PUT = 1
 DEL = 2
@@ -101,18 +102,22 @@ class WAL:
     # -- buffered appends (group-committed) ---------------------------------
     def append_put(self, key: bytes, value: bytes) -> None:
         """Buffer one upsert record (durable at the next ``commit``)."""
+        FP.hit("wal.append")
         self._buf += _frame(bytes([PUT]) + _U32.pack(len(key)) + key + value)
 
     def append_delete(self, key: bytes) -> None:
         """Buffer one tombstone record for ``key``."""
+        FP.hit("wal.append")
         self._buf += _frame(bytes([DEL]) + key)
 
     def append_inval(self, path: str) -> None:
         """Buffer one invalidation-bus publish (device rehydration journal)."""
+        FP.hit("wal.append")
         self._buf += _frame(bytes([INV]) + path.encode("utf-8"))
 
     def append_devmark(self, epoch: int) -> None:
         """Buffer a DEVMARK: device tier has applied through ``epoch``."""
+        FP.hit("wal.append")
         self._buf += _frame(bytes([DEVMARK]) + _U64.pack(epoch))
 
     def pending_bytes(self) -> int:
@@ -127,11 +132,12 @@ class WAL:
         with obs.span("wal.commit", epoch=epoch,
                       bytes=len(self._buf)):
             self._buf += _frame(bytes([COMMIT]) + _U64.pack(epoch))
-            self._f.write(bytes(self._buf))
+            FP.write("wal.commit", self._f, bytes(self._buf))
             self._buf.clear()
             self._f.flush()
             if self.sync == "fsync":
                 with obs.span("wal.fsync"):
+                    FP.hit("wal.fsync")
                     os.fsync(self._f.fileno())
 
     def reset(self) -> None:

@@ -14,6 +14,7 @@ from repro.core.store import MemKV, PathStore
 from repro.data.corpus import AuthTraceConfig, generate_authtrace
 from repro.storage import (DurableKV, SSTable, open_durable_store,
                            write_sstable)
+from repro.storage import failpoints as FPS
 from repro.storage import manifest as MF
 from repro.storage import wal as W
 from repro.storage.lsm import WAL_NAME
@@ -466,19 +467,28 @@ def test_leveled_compaction_merges_only_triggering_level(tmp_path):
 
 
 def test_leveled_cascade_and_major_compact(tmp_path):
-    """ratio-2 store cascades L0→L1→L2 as runs fill; ``compact()`` then
-    collapses the whole tree into one bottom segment."""
+    """ratio-2 store with a tiny partition target cascades beyond L1 as
+    the byte caps overflow; ``compact()`` then collapses the whole tree
+    into one bottom level of disjoint partitions."""
     d = str(tmp_path / "kv")
-    kv = DurableKV(d, memtable_limit=2, sync="none", level_ratio=2)
+    kv = DurableKV(d, memtable_limit=2, sync="none", level_ratio=2,
+                   segment_target_bytes=32)
     for w in range(8):
         _fill(kv, 2 * w, 2 * w + 2, w + 1)
     counts = kv.level_counts()
     assert sum(counts.values()) >= 1 and max(counts) >= 2, counts
     assert len(dict(kv.scan(b"k"))) == 16
     kv.compact()
-    assert sum(kv.level_counts().values()) == 1
-    assert max(kv.level_counts()) >= 2      # stayed at the bottom level
+    counts = kv.level_counts()
+    assert len(counts) == 1, counts          # one (bottom) level remains
+    assert max(counts) >= 2                  # stayed at the bottom level
+    # ... and its partitions are disjoint, range-known, and findable
+    metas = [m for m in kv._manifest.segments]
+    spans = sorted((bytes.fromhex(m.min_key), bytes.fromhex(m.max_key))
+                   for m in metas)
+    assert all(spans[i][0] > spans[i - 1][1] for i in range(1, len(spans)))
     assert len(dict(kv.scan(b"k"))) == 16
+    assert kv.get(b"k00000") == b"v0" and kv.get(b"k00015") == b"v15"
     kv.close()
 
 
@@ -505,53 +515,237 @@ def test_tombstones_survive_level_merge_until_bottom(tmp_path):
     kv2.close()
 
 
-@pytest.mark.parametrize("crash_on_call, desc", [
-    (2, "L0->L1 merge"),        # call 1 = spill manifest, 2 = L0 merge
-    (3, "L1->L2 cascade"),      # 3 = the cascading L1 merge
-])
-def test_crash_between_merge_write_and_manifest_swap(tmp_path, monkeypatch,
-                                                     crash_on_call, desc):
-    """ISSUE 7 acceptance: a crash after a level-merge segment is written
-    but before the manifest swap loses nothing and resurrects nothing —
-    the orphan merge output is swept and the pre-merge inputs still serve
-    an identical view, at every level of the cascade."""
+def _abandon(kv):
+    """Drop a wounded engine without close(): release file handles the
+    way a dead process would (no commit, no manifest write)."""
+    try:
+        kv._wal._f.close()
+    except Exception:
+        pass
+    for t in kv._tables.values():
+        try:
+            t.close()
+        except Exception:
+            pass
+
+
+def _live_seg_names(kv):
+    """Every .seg name the manifest considers paid-for: live segments
+    plus a paused merge's recorded outputs."""
+    live = set(kv._manifest.segment_names())
+    if kv._manifest.compaction is not None:
+        live.update(o.name for o in kv._manifest.compaction.outputs)
+    return live
+
+
+# the durability-critical IO sites a merge/spill walks through (WAL
+# sites are excluded on purpose: these schedules crash *after* the
+# wave's group commit, so the expected recovered content is exact)
+_MERGE_SITES = frozenset({"segment.write", "manifest.write",
+                          "manifest.replace"})
+
+
+@pytest.mark.parametrize("mode", ["fail", "torn"])
+def test_crash_during_partitioned_merge_every_boundary(tmp_path, mode):
+    """ISSUE 9 acceptance (PR-5 crash tests, parametrized over
+    partitioned merges): crash at EVERY segment-write / manifest-write /
+    manifest-swap boundary of a wave whose spill triggers a
+    multi-partition L0→L1 merge — cleanly or with a torn prefix — and
+    recovery must lose nothing, resurrect nothing, and leave no
+    unreferenced .seg behind.  The schedule length is discovered with a
+    counting plan first, so every boundary is exercised, not a
+    hand-picked few."""
+    def build(d):
+        return DurableKV(d, memtable_limit=2, sync="none", level_ratio=2,
+                         segment_target_bytes=32)
+
+    def preload(kv):
+        _fill(kv, 0, 2, 1)
+        _fill(kv, 2, 4, 2)                   # L0 merge → partitioned L1
+        _fill(kv, 4, 6, 3)                   # L0 = 1 beside L1
+
+    # pass 0: count the faultable ops in the triggering wave
+    kv = build(str(tmp_path / "count"))
+    preload(kv)
+    with FPS.armed(FPS.FailPlan(crash_at=0, sites=_MERGE_SITES)) as counter:
+        _fill(kv, 6, 8, 4)                   # spill + partitioned merge
+    kv.close()
+    n_ops = len(counter.hits)
+    # spill (seg + manifest) + multi-partition merge (≥ 2 segs + manifest)
+    assert n_ops >= 5, counter.hits
+
+    expected = {f"k{i:05d}".encode(): f"v{i}".encode() for i in range(8)}
+    for nth in range(1, n_ops + 1):
+        d = str(tmp_path / f"kv_{mode}_{nth}")
+        kv = build(d)
+        preload(kv)
+        with FPS.armed(FPS.FailPlan(crash_at=nth, mode=mode,
+                                    sites=_MERGE_SITES)):
+            with pytest.raises(FPS.InjectedCrash):
+                _fill(kv, 6, 8, 4)
+        _abandon(kv)
+
+        kv2 = build(d)
+        assert dict(kv2.scan(b"k")) == expected, f"boundary {nth}"
+        for k, v in expected.items():
+            assert kv2.get(k) == v
+        # recovery swept everything the manifest does not pay for
+        on_disk = {n for n in os.listdir(d) if n.endswith(".seg")}
+        assert on_disk == _live_seg_names(kv2), f"boundary {nth}"
+        # and the store still moves forward after the crash
+        _fill(kv2, 8, 10, 5)
+        assert len(dict(kv2.scan(b"k"))) == 10
+        kv2.close()
+
+
+def test_budget_pause_and_resume(tmp_path):
+    """A merge that exhausts ``compact_budget_bytes`` pauses resumably:
+    the completed partitions + resume key are durable in the manifest,
+    reads stay correct off the still-live inputs, ``compact_debt``
+    reports the remainder, and later commit boundaries finish the merge
+    and drain the debt to zero."""
     d = str(tmp_path / "kv")
-    kv = DurableKV(d, memtable_limit=2, sync="none", level_ratio=2)
-    # state on the brink of a full cascade: L0=1, L1=1 (one more spill
-    # triggers L0 merge -> L1=2 -> cascading L1 merge -> L2)
-    _fill(kv, 0, 2, 1)
-    _fill(kv, 2, 4, 2)                       # cascade: L1 = 1
-    _fill(kv, 4, 6, 3)                       # L0 = 1
-    assert kv.level_counts() == {0: 1, 1: 1}
+    kv = DurableKV(d, memtable_limit=4, sync="none", level_ratio=2,
+                   segment_target_bytes=32, compact_budget_bytes=150)
+    _fill(kv, 0, 4, 1)
+    _fill(kv, 4, 8, 2)                       # L0=2 → merge, pauses on budget
+    st = kv._manifest.compaction
+    assert st is not None and st.next_key and st.outputs
+    assert kv.compact_debt() > 0
+    # the paused state is DURABLE, not just in memory
+    with open(os.path.join(d, MF.MANIFEST_NAME), encoding="utf-8") as f:
+        on_disk = json.load(f)
+    assert on_disk["compaction"] is not None
+    assert on_disk["compaction"]["next_key"] == st.next_key
+    # reads while paused: inputs still live, view identical
+    expected = {f"k{i:05d}".encode(): f"v{i}".encode() for i in range(8)}
+    assert dict(kv.scan(b"k")) == expected
+    # epoch-advancing commits drain the debt a budget-slice at a time
+    epoch, waves = 2, 0
+    while kv.compact_debt() > 0:
+        epoch += 1
+        kv.commit_epoch(epoch)
+        assert kv.last_compact_bytes <= 150 + 200, \
+            "a resume slice blew through the budget"
+        waves += 1
+        assert waves < 50, "debt never drained"
+    assert waves >= 1
+    assert kv._manifest.compaction is None
+    assert dict(kv.scan(b"k")) == expected
+    # the settled tree keeps the tentpole invariant: every level ≥ 1 is
+    # a partitioned (range-disjoint, binary-searchable) view
+    assert all(m.level >= 1 for m in kv._manifest.segments)
+    for view in kv._levels:
+        assert view.partitioned, f"level {view.level} fell back to probe-all"
     kv.close()
 
-    kv = DurableKV(d, sync="none", level_ratio=2, memtable_limit=2)
-    calls = {"n": 0}
-    real_store = MF.store
 
-    def exploding_store(dirname, m, sync=True):
-        calls["n"] += 1
-        if calls["n"] == crash_on_call:
-            raise RuntimeError(f"simulated crash during {desc}")
-        real_store(dirname, m, sync=sync)
+def test_budget_pause_survives_reopen_and_resumes(tmp_path):
+    """The resumable-merge state round-trips a clean close/reopen: the
+    reopened store still owes the debt and finishes the same merge."""
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=4, sync="none", level_ratio=2,
+                   segment_target_bytes=32, compact_budget_bytes=150)
+    _fill(kv, 0, 4, 1)
+    _fill(kv, 4, 8, 2)
+    assert kv._manifest.compaction is not None
+    paused_outputs = [o.name for o in kv._manifest.compaction.outputs]
+    kv.close()
 
-    monkeypatch.setattr(MF, "store", exploding_store)
-    with pytest.raises(RuntimeError, match="simulated crash"):
-        _fill(kv, 6, 8, 4)                   # spill + cascading merges
-    monkeypatch.setattr(MF, "store", real_store)
-    # simulated crash: abandon the wounded engine without close()
-    del kv
-
-    kv2 = DurableKV(d, sync="none", level_ratio=2, memtable_limit=2)
+    kv2 = DurableKV(d, memtable_limit=4, sync="none", level_ratio=2,
+                    segment_target_bytes=32, compact_budget_bytes=150)
+    st = kv2._manifest.compaction
+    assert st is not None
+    assert [o.name for o in st.outputs] == paused_outputs, \
+        "recovery swept a paused merge's paid-for outputs"
+    assert kv2.compact_debt() > 0
+    epoch = 2
+    while kv2.compact_debt() > 0:
+        epoch += 1
+        kv2.commit_epoch(epoch)
+        assert epoch < 50
     assert dict(kv2.scan(b"k")) == {f"k{i:05d}".encode(): f"v{i}".encode()
                                     for i in range(8)}
-    for i in range(8):
-        assert kv2.get(f"k{i:05d}".encode()) == f"v{i}".encode()
-    # the merge output written before the "crash" was swept as an orphan:
-    # every .seg on disk is manifest-live
-    on_disk = {n for n in os.listdir(d) if n.endswith(".seg")}
-    assert on_disk == set(kv2._manifest.segment_names())
     kv2.close()
+
+
+@pytest.mark.parametrize("mode", ["fail", "torn"])
+def test_crash_during_resumed_merge_every_boundary(tmp_path, mode):
+    """ISSUE 9 acceptance (mid-resume crash points): pause a merge on
+    budget, then crash the RESUMING wave at every IO boundary.  Recovery
+    must keep the recorded pre-pause partitions, re-merge only from the
+    resume key, and still converge to the oracle view."""
+    def build(d):
+        return DurableKV(d, memtable_limit=4, sync="none", level_ratio=2,
+                         segment_target_bytes=32, compact_budget_bytes=150)
+
+    def pause(kv):
+        _fill(kv, 0, 4, 1)
+        _fill(kv, 4, 8, 2)
+        assert kv._manifest.compaction is not None, "merge did not pause"
+
+    # count the resuming wave's faultable ops
+    kv = build(str(tmp_path / "count"))
+    pause(kv)
+    with FPS.armed(FPS.FailPlan(crash_at=0, sites=_MERGE_SITES)) as counter:
+        epoch = 3
+        while kv._manifest.compaction is not None:
+            kv.commit_epoch(epoch)
+            epoch += 1
+    kv.close()
+    n_ops = len(counter.hits)
+    assert n_ops >= 2, counter.hits
+
+    expected = {f"k{i:05d}".encode(): f"v{i}".encode() for i in range(8)}
+    for nth in range(1, n_ops + 1):
+        d = str(tmp_path / f"kv_{mode}_{nth}")
+        kv = build(d)
+        pause(kv)
+        with FPS.armed(FPS.FailPlan(crash_at=nth, mode=mode,
+                                    sites=_MERGE_SITES)):
+            with pytest.raises(FPS.InjectedCrash):
+                epoch = 3
+                while kv._manifest.compaction is not None:
+                    kv.commit_epoch(epoch)
+                    epoch += 1
+        _abandon(kv)
+
+        kv2 = build(d)
+        assert dict(kv2.scan(b"k")) == expected, f"resume boundary {nth}"
+        on_disk = {n for n in os.listdir(d) if n.endswith(".seg")}
+        assert on_disk == _live_seg_names(kv2), f"resume boundary {nth}"
+        epoch = 20                           # drain the debt for real
+        while kv2.compact_debt() > 0:
+            kv2.commit_epoch(epoch)
+            epoch += 1
+            assert epoch < 90
+        assert dict(kv2.scan(b"k")) == expected
+        assert kv2._manifest.compaction is None
+        kv2.close()
+
+
+def test_major_compact_abandons_paused_merge(tmp_path):
+    """``compact()`` supersedes a paused merge: the recorded outputs are
+    deleted (they are copies of still-live inputs), the state clears,
+    and the full view survives in bottom-level partitions."""
+    d = str(tmp_path / "kv")
+    kv = DurableKV(d, memtable_limit=4, sync="none", level_ratio=2,
+                   segment_target_bytes=32, compact_budget_bytes=150)
+    _fill(kv, 0, 4, 1)
+    _fill(kv, 4, 8, 2)
+    st = kv._manifest.compaction
+    assert st is not None
+    orphan_candidates = [o.name for o in st.outputs]
+    kv.compact()
+    assert kv._manifest.compaction is None
+    on_disk = {n for n in os.listdir(d) if n.endswith(".seg")}
+    assert not (on_disk & set(orphan_candidates)), \
+        "abandoned merge outputs leaked"
+    assert on_disk == set(kv._manifest.segment_names())
+    assert dict(kv.scan(b"k")) == {f"k{i:05d}".encode(): f"v{i}".encode()
+                                   for i in range(8)}
+    assert kv.compact_debt() == 0
+    kv.close()
 
 
 def test_bloom_filter_no_false_negatives_and_fpr():
@@ -666,13 +860,76 @@ def test_pr3_manifest_and_segments_migrate(tmp_path):
 
     with open(os.path.join(d, MF.MANIFEST_NAME), encoding="utf-8") as f:
         o = json.load(f)
-    assert o["format"] == MF.FORMAT == 2
+    assert o["format"] == MF.FORMAT == 3
     assert all(isinstance(s, dict) and "level" in s for s in o["segments"])
+    assert o["compaction"] is None
     kv2 = DurableKV(d, sync="none")
     assert kv2.last_epoch() == 7
     assert dict(kv2.scan(b"")) == {b"a": b"1", b"b": b"22", b"c": b"3"}
     # post-migration segments carry blooms at the default budget
     assert all(seg.bloom is not None for _, seg in kv2._read_order)
+    kv2.close()
+
+
+def test_format2_manifest_migrates_to_format3(tmp_path):
+    """A leveled (format-2, PR-5) manifest opens with no pending merge
+    and the first manifest write migrates it to format 3 with an
+    explicit ``compaction: null`` field."""
+    d = str(tmp_path / "kv")
+    os.makedirs(d)
+    write_sstable(os.path.join(d, "seg_000001.seg"),
+                  [(b"a", b"1"), (b"b", b"2")], sync=False)
+    with open(os.path.join(d, MF.MANIFEST_NAME), "w", encoding="utf-8") as f:
+        json.dump({"format": 2,
+                   "segments": [{"name": "seg_000001.seg", "level": 1,
+                                 "records": 2, "bytes": 64,
+                                 "min_key": b"a".hex(),
+                                 "max_key": b"b".hex(),
+                                 "bloom_k": 0, "bloom_bits": 0}],
+                   "next_seg": 2, "epoch": 3, "device_epoch": 3,
+                   "pending_inval": []}, f)
+
+    kv = DurableKV(d, sync="none", memtable_limit=4)
+    assert kv._manifest.compaction is None   # format 2 ⇒ nothing pending
+    assert kv.level_counts() == {1: 1}
+    assert kv.get(b"a") == b"1"
+    for k in (b"c", b"d", b"e", b"f"):
+        kv.put(k, b"3")
+    kv.commit_epoch(4)                       # spill ⇒ first manifest write
+    kv.close()
+
+    with open(os.path.join(d, MF.MANIFEST_NAME), encoding="utf-8") as f:
+        o = json.load(f)
+    assert o["format"] == 3 and "compaction" in o
+    kv2 = DurableKV(d, sync="none")
+    assert dict(kv2.scan(b"")) == {b"a": b"1", b"b": b"2", b"c": b"3",
+                                   b"d": b"3", b"e": b"3", b"f": b"3"}
+    kv2.close()
+
+
+def test_block_cache_no_stale_blocks_across_store_generations(tmp_path):
+    """ISSUE 9 satellite: a shared BlockCache must never serve a dead
+    generation's blocks.  Recreating a store at the SAME directory (same
+    segment file names) with different values — the shape of a
+    crash-restore or a test harness reusing a path — must read the new
+    bytes even when the old generation's blocks are still cached."""
+    d = str(tmp_path / "kv")
+    cache = default_block_cache(1 << 20)
+    kv = DurableKV(d, memtable_limit=2, sync="none", block_cache=cache)
+    _fill(kv, 0, 2, 1)                       # spill → seg_000001.seg
+    assert kv.get(b"k00000") == b"v0"        # populate the cache
+    assert len(cache) > 0
+    _abandon(kv)                             # die without close()
+
+    shutil.rmtree(d)                         # new lineage, same path
+    kv2 = DurableKV(d, memtable_limit=2, sync="none", block_cache=cache)
+    kv2.put(b"k00000", b"NEW")
+    kv2.put(b"k00001", b"NEW")
+    kv2.commit_epoch(1)                      # spill → seg_000001.seg again
+    assert [m.name for m in kv2._manifest.segments] == ["seg_000001.seg"]
+    assert kv2.get(b"k00000") == b"NEW", \
+        "shared BlockCache served a stale block from a dead generation"
+    assert dict(kv2.scan(b"k")) == {b"k00000": b"NEW", b"k00001": b"NEW"}
     kv2.close()
 
 
