@@ -187,6 +187,65 @@ def trace_overhead_rows(items, targets, n_iters: int, warmup: int):
              f"x;off={round(off * 1000, 2)}us;on={round(on * 1000, 2)}us")]
 
 
+def pipeline_commit_rows(n_waves: int = 24, wave_writes: int = 32,
+                         n_shards: int = 8) -> list[tuple]:
+    """ISSUE 10 (report-only this PR): how much of the per-wave WAL
+    fsync cost the pipelined + fan-out commit path hides.
+
+    Three runs of the identical write schedule over an 8-shard durable
+    store: synchronous serial commits with ``sync="fsync"`` (the PR-9
+    path), the same with ``sync="none"`` (isolates the schedule's
+    compute), and pipelined + parallel commits with ``sync="fsync"``.
+    The serial fsync bill is ``t_serial - t_compute``; whatever of it no
+    longer shows up on the pipelined wall clock was hidden — by the
+    concurrent per-shard fsyncs and by overlapping wave e's fsync with
+    wave e+1's compute (acceptance target >= 0.5)."""
+    import time as _time
+
+    from repro.storage import open_durable_store
+
+    def one(sync, workers, pipeline):
+        root = tempfile.mkdtemp(prefix="wikikv_pipe_")
+        try:
+            store = open_durable_store(
+                root, n_shards=n_shards, sync=sync, memtable_limit=4096,
+                shard_workers=workers, commit_pipeline=pipeline)
+            t0 = _time.perf_counter()
+            seq = 0
+            for e in range(1, n_waves + 1):
+                for _ in range(wave_writes):
+                    store.put_record(
+                        f"/w/{seq % 16}/r{seq}",
+                        R.FileRecord(name=f"r{seq}", text=f"rec {seq}"))
+                    seq += 1
+                store.commit_epoch(e)
+            store.flush()                # drain: durability is included
+            t = _time.perf_counter() - t0
+            store.close()
+            return t
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+
+    t_serial = min(one("fsync", 0, False) for _ in range(3))
+    t_compute = min(one("none", 0, False) for _ in range(3))
+    t_pipe = min(one("fsync", n_shards, True) for _ in range(3))
+    fsync_bill = max(t_serial - t_compute, 1e-9)
+    visible = max(t_pipe - t_compute, 0.0)
+    hidden = max(0.0, min(1.0, 1.0 - visible / fsync_bill))
+    tag = (f"waves={n_waves};shards={n_shards};"
+           f"serial={round(t_serial * 1000, 1)}ms;"
+           f"compute={round(t_compute * 1000, 1)}ms;"
+           f"pipelined={round(t_pipe * 1000, 1)}ms")
+    return [
+        ("table2_commit_serial_fsync_wave_ms",
+         round(t_serial * 1000 / n_waves, 3), f"ms_per_wave;{tag}"),
+        ("table2_commit_pipelined_wave_ms",
+         round(t_pipe * 1000 / n_waves, 3), "ms_per_wave"),
+        ("table2_commit_pipeline_hidden_fsync_fraction",
+         round(hidden, 3), "fraction;accept>=0.5;report_only_soak"),
+    ]
+
+
 def run(n_iters: int = 1000, warmup: int = 200, seed: int = 0):
     pipe, docs, _ = build_wiki(n_docs=160, n_questions=80, seed=seed)
     items = collect_items(pipe)
@@ -247,6 +306,7 @@ def run(n_iters: int = 1000, warmup: int = 200, seed: int = 0):
         be.close()
     rows.extend(durable_cold_rows(items, rng, n_iters, warmup))
     rows.extend(trace_overhead_rows(items, targets, n_iters, warmup))
+    rows.extend(pipeline_commit_rows())
     rows.append(("table2_wiki_kv_pairs", len(items), "count"))
     emit(rows, header="Table II: per-operator median latency by backend")
     return rows

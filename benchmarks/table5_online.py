@@ -290,6 +290,79 @@ def _run_refresh_scaling(n_delta: int = 64, epochs: int = 3) -> list[tuple]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# ISSUE 10: serial vs parallel shard fan-out (report-only this PR)
+# ---------------------------------------------------------------------------
+class _SleepyKV(MemKV):
+    """MemKV with a fixed per-get latency injection.  ``time.sleep``
+    releases the GIL, which is exactly the point: a real shard tier
+    waits on IO (mmap faults, page cache, eventually sockets), and the
+    fan-out win is overlap of that WAIT — pure-Python compute cannot
+    overlap under the GIL, so the no-injection rows are reported
+    alongside as the honest in-process reference."""
+
+    def __init__(self, delay_s: float, **kw):
+        super().__init__(**kw)
+        self._delay = delay_s
+
+    def get(self, key):
+        if self._delay:
+            time.sleep(self._delay)
+        return super().get(key)
+
+
+def _run_fanout(n_shards: int = 8, wave: int = 256,
+                delay_us: float = 50.0, reps: int = 5) -> list[tuple]:
+    """Batched Q1 p50 per wave, serial loops vs the shard-executor pool
+    (8 shards, wave of 256): the same store content, the same per-get
+    latency injection, only ``shard_workers`` differs.  Acceptance
+    target (report-only this PR): parallel >= 2x serial on the
+    latency-injected rows."""
+    rng = random.Random(7)
+    rows: list[tuple] = []
+    speedups = {}
+    for label, delay in (("", delay_us * 1e-6), ("_noinject", 0.0)):
+        stores = {}
+        for workers in (0, n_shards):
+            store = ShardedPathStore(
+                engines=[_SleepyKV(delay) for _ in range(n_shards)],
+                shard_workers=workers)
+            w = WikiWriter(store, clock=lambda: 0.0)
+            w.ensure_root("root")
+            for d in range(8):
+                w.admit(f"/d{d}", R.DirRecord(name=f"d{d}"))
+                for e in range(64):
+                    w.admit(f"/d{d}/e{e}",
+                            R.FileRecord(name=f"e{e}", text=f"{d}:{e}"))
+            stores[workers] = store
+        live = stores[0].all_paths()
+        batch = [live[rng.randrange(len(live))] for _ in range(wave)]
+        p50 = {}
+        for workers, store in stores.items():
+            he = HostEngine(store)
+            he.q1_get(batch[:16])                     # warm the pool
+            times = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                he.q1_get(batch)
+                times.append((time.perf_counter() - t0) * 1000)
+            p50[workers] = _pct(times, 50)
+        speedups[label] = p50[0] / max(p50[n_shards], 1e-9)
+        tag = f"ms;shards={n_shards};wave={wave}" + \
+            (f";delay={delay_us}us_per_get" if delay else ";no_injection")
+        rows.append((f"table5_fanout_serial_q1_p50{label}",
+                     round(p50[0], 3), tag))
+        rows.append((f"table5_fanout_parallel_q1_p50{label}",
+                     round(p50[n_shards], 3), tag))
+    rows.append(("table5_fanout_parallel_speedup",
+                 round(speedups[""], 2),
+                 "x;accept>=2;report_only_soak;latency_injected"))
+    rows.append(("table5_fanout_parallel_speedup_noinject",
+                 round(speedups["_noinject"], 2),
+                 "x;gil_bound_reference"))
+    return rows
+
+
 def _run_cadence(cadence: int = 4, n_waves: int = 16) -> list[tuple]:
     """Refresh batching: with refresh_cadence=k, per-write visibility lag
     is bounded by k waves and refresh commits drop to n_waves/k."""
@@ -347,6 +420,7 @@ def run(seed: int = 0, n_queries: int = 1000):
     # ISSUE 6: refresh-latency scaling (patch vs rebuild at fixed |Δ|)
     # and refresh-cadence staleness
     rows += _run_refresh_scaling()
+    rows += _run_fanout()
     rows += _run_cadence()
     emit(rows, header="Table V: online latency + quality on "
                       f"{n_queries} queries (waves of {WAVE})")

@@ -21,9 +21,10 @@ from pathlib import Path
 
 # Q1 host-engine p50 rows (plain + digest-range-sharded host backends),
 # the durable tier (WAL + SSTable segments, REPRO_WAL_SYNC=none in CI),
-# and the cold leveled-store rows (ISSUE 7; one-PR soak done) — the
-# gate runs with REPRO_TRACE unset, so these also pin "telemetry is
-# free when off" (ISSUE 8).
+# the cold leveled-store rows (ISSUE 7), and the key-range-partitioned
+# cold rows (ISSUE 9; one-PR soak done) — the gate runs with
+# REPRO_TRACE unset, so these also pin "telemetry is free when off"
+# (ISSUE 8).
 GATED_METRICS = (
     "table2_wikikv_q1",
     "table2_wikikv_sharded_q1",
@@ -35,19 +36,34 @@ GATED_METRICS = (
     "table2_wikikv_durable_cold_nofilter_q1_miss",
     "table2_wikikv_durable_cold_miss_speedup",
     "table2_wikikv_durable_cold_hit_speedup",
+    "table2_wikikv_durable_cold_part_nofilter_q1_hit",
+    "table2_wikikv_durable_cold_part_nofilter_q1_miss",
 )
+
+# Absolute gates (ISSUE 9/10 soak graduated): ratio-vs-baseline is the
+# wrong shape for these — a speedup getting BETTER would trip a ratio
+# gate, and the trace-overhead ratio is already normalized.  Floors
+# fail when current < floor; ceilings fail when current > ceiling.
+ABSOLUTE_FLOOR_METRICS = {
+    # partitioned binary search vs flat probe-all on filterless files
+    "table2_wikikv_durable_cold_part_speedup": 1.5,
+}
+ABSOLUTE_CEILING_METRICS = {
+    # traced/untraced Q1 p50 ratio — the REPRO_TRACE=1 span cost
+    "table2_trace_overhead_q1": 2.0,
+}
 
 # Rows recorded in the JSON artifact and printed, but not gated; newly
 # added benchmarks soak here for one PR before joining GATED_METRICS.
-# The trace-overhead row (ISSUE 8) is the traced/untraced Q1 p50 ratio —
-# the span cost of REPRO_TRACE=1.  The ``_part_nofilter`` rows (ISSUE 9)
-# isolate key-range partitioning on filterless files; the part_speedup
-# acceptance is flat-miss/partitioned-miss >= 1.5x.
+# The ISSUE 10 rows: parallel-fanout speedup over the serial shard
+# loops (latency-injected; acceptance >= 2x) and the fraction of the
+# per-wave WAL fsync bill the pipelined commit hides (>= 0.5).
 REPORT_ONLY_METRICS = (
-    "table2_trace_overhead_q1",
-    "table2_wikikv_durable_cold_part_nofilter_q1_hit",
-    "table2_wikikv_durable_cold_part_nofilter_q1_miss",
-    "table2_wikikv_durable_cold_part_speedup",
+    "table5_fanout_parallel_speedup",
+    "table5_fanout_parallel_speedup_noinject",
+    "table2_commit_pipeline_hidden_fsync_fraction",
+    "table2_commit_serial_fsync_wave_ms",
+    "table2_commit_pipelined_wave_ms",
 )
 
 # Informational budget from the ISSUE 3 acceptance: durable Q1 p50 should
@@ -143,6 +159,22 @@ def main() -> int:
             f"ratio={ratio:.2f}x (limit {args.factor:.2f}x) {status}"
         )
         if ratio > args.factor:
+            failures.append(metric)
+    for metric, floor in sorted(ABSOLUTE_FLOOR_METRICS.items()):
+        if metric not in rows:
+            continue
+        current = rows[metric]
+        status = "OK" if current >= floor else "REGRESSED"
+        print(f"bench gate: {metric}: current={current:.2f} (floor {floor:.2f}) {status}")
+        if current < floor:
+            failures.append(metric)
+    for metric, ceiling in sorted(ABSOLUTE_CEILING_METRICS.items()):
+        if metric not in rows:
+            continue
+        current = rows[metric]
+        status = "OK" if current <= ceiling else "REGRESSED"
+        print(f"bench gate: {metric}: current={current:.2f} (ceiling {ceiling:.2f}) {status}")
+        if current > ceiling:
             failures.append(metric)
     if failures:
         print(f"bench gate: FAILED — regressed metrics: {failures}", file=sys.stderr)

@@ -45,6 +45,7 @@ every Q1–Q4 batch, including misses and unadvertised orphans.
 from __future__ import annotations
 
 import bisect
+import heapq
 import threading
 import time
 from dataclasses import dataclass, field
@@ -57,6 +58,7 @@ from . import paths as P
 from . import records as R
 from .consistency import (CASConflict, InvalidationBus, WikiWriter,
                           attach_journal)
+from .executor import CommitSequencer, ShardExecutor, resolve_commit_pipeline
 from .store import KVEngine, MemKV, PathStore, _segment_tokens
 
 # operator names used for stats keys
@@ -76,6 +78,8 @@ D_SEG_PROBE = "d_seg_probe"     # segments considered per point read (the
                                 # partitioned-level acceptance counter)
 D_COMPACT_DEBT = "d_compact_debt"   # GAUGE, not a counter: outstanding
                                     # merge bytes — the backpressure signal
+D_PIPELINE_DEPTH = "d_commit_pipeline_depth"  # GAUGE: sealed-but-not-durable
+                                              # commit waves in flight (0/1)
 
 
 # ---------------------------------------------------------------------------
@@ -319,13 +323,26 @@ class ShardedPathStore:
     digest-range shard its own WAL + segment directory, so group commit,
     spill and compaction stay per-shard on disk exactly as the memtables
     are in memory.
+
+    **Fan-out execution** (ISSUE 10): every multi-shard operation routes
+    through one :class:`~repro.core.executor.ShardExecutor` —
+    ``shard_workers`` (None → ``REPRO_SHARD_WORKERS``, default 0) picks
+    serial loops (bit-identical to the pre-executor behavior) or a
+    thread pool, so wave latency is the *max* of per-shard work, not the
+    sum.  ``commit_pipeline`` (None → ``REPRO_COMMIT_PIPELINE``) makes
+    durable group commits depth-1 pipelined: wave e's per-shard WAL
+    fsyncs run concurrently on a commit sequencer while wave e+1
+    computes; :meth:`durable_epoch` advertises only landed fsyncs.
     """
 
     def __init__(self, n_shards: int = 4,
                  engines: Sequence[KVEngine] | None = None,
                  depth_budget: int | None = P.DEFAULT_DEPTH_BUDGET,
                  memtable_limit: int = 4096,
-                 engine_factory: Callable[[int], KVEngine] | None = None):
+                 engine_factory: Callable[[int], KVEngine] | None = None,
+                 executor: ShardExecutor | None = None,
+                 shard_workers: int | None = None,
+                 commit_pipeline: bool | None = None):
         if engines is not None:
             self.shards = [PathStore(e, depth_budget=depth_budget)
                            for e in engines]
@@ -338,6 +355,11 @@ class ShardedPathStore:
                                      depth_budget=depth_budget)
                            for _ in range(max(1, n_shards))]
         self.depth_budget = depth_budget
+        self._own_executor = executor is None
+        self.executor = executor if executor is not None \
+            else ShardExecutor(workers=shard_workers)
+        self._pipeline = resolve_commit_pipeline(commit_pipeline)
+        self._sequencer: CommitSequencer | None = None
 
     @property
     def n_shards(self) -> int:
@@ -379,41 +401,104 @@ class ShardedPathStore:
             out.append(rec)
         return out
 
+    # -- batched point fan-outs (one scatter task per owning shard) ---------
+    def _fan_out_points(self, paths: Sequence[str], per_shard, serial_one):
+        """Route a batch of paths: normalize once, group by owning shard,
+        ONE executor task per shard, results re-assembled in input order.
+        Serial mode short-circuits to the literal per-path loop so the
+        call order (and thus op-counter/engine state) is bit-identical
+        to the unbatched facade."""
+        if self.executor.workers == 0 or len(paths) <= 1:
+            return [serial_one(p) for p in paths]
+        by_shard: dict[int, list[tuple[int, str]]] = {}
+        for i, raw in enumerate(paths):
+            p = P.normalize(raw, depth_budget=self.depth_budget)
+            by_shard.setdefault(self.shard_of(p), []).append((i, p))
+        groups = sorted(by_shard.items())
+
+        def run(_, group):
+            si, pairs = group
+            return per_shard(self.shards[si], [p for _, p in pairs])
+
+        out = [None] * len(paths)
+        for (_, pairs), res in zip(groups,
+                                   self.executor.scatter(run, groups)):
+            for (i, _), v in zip(pairs, res):
+                out[i] = v
+        return out
+
+    def get_many(self, paths: Sequence[str]) -> list[Optional[R.Record]]:
+        """Batched Q1: ``[self.get(p) for p in paths]``, fanned out as
+        one task per owning shard when the executor has workers."""
+        return self._fan_out_points(
+            paths, lambda shard, ps: [shard.get(p) for p in ps], self.get)
+
+    def ls_many(self, paths: Sequence[str]
+                ) -> list[Optional[tuple[R.DirRecord, list[str]]]]:
+        """Batched Q2 (same fan-out shape as :meth:`get_many`)."""
+        return self._fan_out_points(
+            paths, lambda shard, ps: [shard.ls(p) for p in ps], self.ls)
+
+    def navigate_many(self, paths: Sequence[str]) -> list[list[R.Record]]:
+        """Batched Q3: flatten every ancestor chain into ONE batched get
+        fan-out, then truncate each chain at its first miss — the same
+        flatten-then-truncate shape the device engine uses."""
+        if self.executor.workers == 0 or len(paths) <= 1:
+            return [self.navigate(p) for p in paths]
+        norm = [P.normalize(p, depth_budget=self.depth_budget)
+                for p in paths]
+        chains = [list(P.ancestors(p)) + [p] for p in norm]
+        recs = self.get_many([a for chain in chains for a in chain])
+        out: list[list[R.Record]] = []
+        i = 0
+        for chain in chains:
+            hit: list[R.Record] = []
+            alive = True
+            for _ in chain:
+                rec = recs[i]
+                i += 1
+                if alive and rec is not None:
+                    hit.append(rec)
+                else:
+                    alive = False
+            out.append(hit)
+        return out
+
+    # -- namespace fan-outs (scatter + ordered k-way merge) -----------------
+    def _scatter(self, fn: Callable[[int, PathStore], object]) -> list:
+        """Fan one callable out across every shard via the executor
+        (serial loop in shard order when ``workers == 0``)."""
+        return self.executor.scatter(fn, self.shards)
+
     def search(self, prefix: str, limit: int | None = None) -> list[str]:
         # per-shard results are already in path order, so the global first
         # `limit` paths are contained in the union of per-shard first
-        # `limit` — fan out WITH the limit, then merge + truncate
-        merged: list[str] = []
-        for shard in self.shards:
-            merged.extend(shard.search(prefix, limit=limit))
-        merged.sort()
+        # `limit` — fan out WITH the limit, then k-way merge (O(n log k),
+        # the shards are sorted runs) + truncate
+        per = self._scatter(lambda i, s: s.search(prefix, limit=limit))
+        merged = list(heapq.merge(*per))
         return merged if limit is None else merged[:limit]
 
     def search_contains(self, token: str, limit: int | None = None) -> list[str]:
-        merged: list[str] = []
-        for shard in self.shards:
-            merged.extend(shard.search_contains(token, limit=limit))
-        merged.sort()
+        per = self._scatter(
+            lambda i, s: s.search_contains(token, limit=limit))
+        merged = list(heapq.merge(*per))
         return merged if limit is None else merged[:limit]
 
     # -- namespace / maintenance -------------------------------------------
     def all_paths(self) -> list[str]:
-        out: list[str] = []
-        for shard in self.shards:
-            out.extend(shard.all_paths())
-        out.sort()
-        return out
+        return list(heapq.merge(*self._scatter(lambda i, s: s.all_paths())))
 
     def count(self) -> int:
-        return sum(s.count() for s in self.shards)
+        return sum(self._scatter(lambda i, s: s.count()))
 
     def flush(self) -> None:
-        for s in self.shards:
-            s.flush()
+        self._drain_pipeline()
+        self._scatter(lambda i, s: s.flush())
 
     def compact(self) -> None:
-        for s in self.shards:
-            s.compact()
+        self._drain_pipeline()
+        self._scatter(lambda i, s: s.compact())
 
     def op_counts(self) -> dict[str, int]:
         total: dict[str, int] = {}
@@ -428,18 +513,67 @@ class ShardedPathStore:
         return any(s.durable for s in self.shards)
 
     def close(self) -> None:
-        for s in self.shards:
-            s.close()
+        """Drain the commit pipeline, close every shard, then release
+        the execution resources this store owns."""
+        try:
+            self._drain_pipeline()
+        finally:
+            self._scatter(lambda i, s: s.close())
+            if self._sequencer is not None:
+                self._sequencer.close()
+                self._sequencer = None
+            if self._own_executor:
+                self.executor.close()
 
     def commit_epoch(self, epoch: int) -> None:
-        for s in self.shards:
-            s.commit_epoch(epoch)
+        """Fan the group commit out across shards.  Pipelined (durable
+        stores with ``commit_pipeline`` on): join wave e-1's in-flight
+        fsync, seal every shard synchronously, hand the durability work
+        to the sequencer and return — wave e's fsync overlaps the
+        caller's next wave.  Otherwise: scatter synchronous per-shard
+        commits (concurrent per-shard fsyncs when the executor has
+        workers, the serial loop when not)."""
+        if self._pipeline and self.durable:
+            self._commit_pipelined(epoch)
+        else:
+            self._scatter(lambda i, s: s.commit_epoch(epoch))
+
+    def _commit_pipelined(self, epoch: int) -> None:
+        seq = self._sequencer
+        if seq is None:
+            seq = self._sequencer = CommitSequencer(
+                self.executor, durable_epoch=self.last_epoch())
+        seq.wait()                      # depth 1: join wave e-1 first
+        completes = [c for c in (s.seal_commit(epoch) for s in self.shards)
+                     if c is not None]
+        seq.submit(epoch, completes)
+
+    def _drain_pipeline(self) -> None:
+        """Join any sealed-but-not-durable wave.  Every path that writes
+        segment files or reads WAL durability state directly (flush,
+        compact, close) must drain first, or its own WAL commit could
+        overtake the sealed wave's bytes."""
+        if self._sequencer is not None:
+            self._sequencer.wait()
+
+    def durable_epoch(self) -> int:
+        """The advertised durable epoch: the newest epoch whose WAL
+        fsync has LANDED on every shard.  Trails :meth:`last_epoch` by
+        at most the one in-flight pipelined wave; equal to it whenever
+        the pipeline is off or drained."""
+        if self._sequencer is not None:
+            return self._sequencer.durable_epoch()
+        return self.last_epoch()
+
+    def commit_pipeline_depth(self) -> int:
+        """Sealed-but-not-yet-durable waves in flight (0 or 1)."""
+        return 0 if self._sequencer is None else self._sequencer.depth()
 
     def compact_debt(self) -> int | None:
         """Fleet-wide outstanding merge bytes (None if no shard is
         durable): one shard's backlog is enough to raise backpressure,
         so the shards sum rather than average."""
-        debts = [d for d in (s.compact_debt() for s in self.shards)
+        debts = [d for d in self._scatter(lambda i, s: s.compact_debt())
                  if d is not None]
         return sum(debts) if debts else None
 
@@ -453,13 +587,12 @@ class ShardedPathStore:
         shard.journal_invalidation(p)
 
     def mark_device_epoch(self, epoch: int) -> None:
-        for s in self.shards:
-            s.mark_device_epoch(epoch)
+        self._scatter(lambda i, s: s.mark_device_epoch(epoch))
 
     def pending_invalidations(self) -> list[str]:
         out: list[str] = []
-        for s in self.shards:
-            out.extend(s.pending_invalidations())
+        for res in self._scatter(lambda i, s: s.pending_invalidations()):
+            out.extend(res)
         return out
 
 
@@ -550,20 +683,32 @@ class HostEngine(QueryEngine):
         if debt is not None:
             self.stats.ops[D_COMPACT_DEBT] = debt
             obs.gauge("lsm.compact_debt").set(debt)
+        depth_fn = getattr(self.store, "commit_pipeline_depth", None)
+        if depth_fn is not None:
+            self.stats.ops[D_PIPELINE_DEPTH] = depth_fn()
 
     def q1_get(self, paths):
         self.stats.record(Q1, len(paths))
         with obs.span("host.q1_get"):
+            batched = getattr(self.store, "get_many", None)
+            if batched is not None:
+                return batched(paths)
             return [self.store.get(p) for p in paths]
 
     def q2_ls(self, paths):
         self.stats.record(Q2, len(paths))
         with obs.span("host.q2_ls"):
+            batched = getattr(self.store, "ls_many", None)
+            if batched is not None:
+                return batched(paths)
             return [self.store.ls(p) for p in paths]
 
     def q3_navigate(self, paths):
         self.stats.record(Q3, len(paths))
         with obs.span("host.q3_navigate"):
+            batched = getattr(self.store, "navigate_many", None)
+            if batched is not None:
+                return batched(paths)
             return [self.store.navigate(p) for p in paths]
 
     def q4_search(self, prefixes, limit=None):

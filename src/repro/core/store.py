@@ -31,6 +31,15 @@ from . import paths as P
 from . import records as R
 
 
+# One process-wide lock for every engine's op-counter dict: shard
+# fan-outs run engine calls on executor worker threads, and the unlocked
+# ``d[k] = d.get(k, 0) + 1`` read-modify-write would drop increments
+# under contention — the seg_probe/bloom/cache counters must stay exact
+# (tests hammer them multi-threaded).  Counter bumps are rare relative
+# to reads, so one shared lock beats a per-engine allocation.
+_OPS_LOCK = threading.Lock()
+
+
 class KVEngine:
     """Minimal KV contract: all keys/values are bytes."""
 
@@ -52,13 +61,15 @@ class KVEngine:
 
     # --- stats (fed to evolution operators and benches) ---
     def op_counts(self) -> dict[str, int]:
-        return dict(getattr(self, "_ops", {}))
+        with _OPS_LOCK:
+            return dict(getattr(self, "_ops", {}))
 
     def _count(self, op: str) -> None:
-        ops = getattr(self, "_ops", None)
-        if ops is None:
-            ops = self._ops = {}
-        ops[op] = ops.get(op, 0) + 1
+        with _OPS_LOCK:
+            ops = getattr(self, "_ops", None)
+            if ops is None:
+                ops = self._ops = {}
+            ops[op] = ops.get(op, 0) + 1
 
 
 _TOMBSTONE = object()
@@ -336,6 +347,26 @@ class PathStore:
         COMMIT marker on a durable engine; no-op on volatile ones)."""
         if hasattr(self.engine, "commit_epoch"):
             self.engine.commit_epoch(epoch)
+
+    def seal_commit(self, epoch: int):
+        """Synchronous half of a pipelined group commit: seal the
+        engine's buffered wave under its lock and return the deferred
+        durability closure (WAL write + fsync + spill) for the commit
+        sequencer to run off-thread.  None when there is nothing to make
+        durable — or when the engine is volatile / pre-pipeline, in
+        which case this degrades to a plain synchronous commit."""
+        fn = getattr(self.engine, "seal_commit", None)
+        if fn is None:
+            self.commit_epoch(epoch)
+            return None
+        return fn(epoch)
+
+    def durable_epoch(self) -> int:
+        """Newest epoch advertised as durable.  A synchronous commit
+        path never advertises ahead of the WAL, so this is simply the
+        last committed epoch; ``ShardedPathStore`` overrides it with the
+        commit sequencer's landed-fsync watermark when pipelining."""
+        return self.last_epoch()
 
     def compact_debt(self) -> int | None:
         """Outstanding merge bytes owed by a durable engine (the

@@ -67,12 +67,15 @@ class Registry:
         self.pid = os.getpid()
 
     # -- metric accessors (null objects when disabled) ----------------------
+    # setdefault is a single atomic dict op, so two worker threads racing
+    # to create the same metric get the same object (a stray loser
+    # Histogram() is garbage, never a dropped-sample sink)
     def histogram(self, name: str):
         if not self.enabled:
             return NULL_METRIC
         h = self.histograms.get(name)
         if h is None:
-            h = self.histograms[name] = Histogram()
+            h = self.histograms.setdefault(name, Histogram())
         return h
 
     def counter(self, name: str):
@@ -80,7 +83,7 @@ class Registry:
             return NULL_METRIC
         c = self.counters.get(name)
         if c is None:
-            c = self.counters[name] = Counter()
+            c = self.counters.setdefault(name, Counter())
         return c
 
     def gauge(self, name: str):
@@ -88,7 +91,7 @@ class Registry:
             return NULL_METRIC
         g = self.gauges.get(name)
         if g is None:
-            g = self.gauges[name] = Gauge()
+            g = self.gauges.setdefault(name, Gauge())
         return g
 
     # -- spans --------------------------------------------------------------
@@ -233,6 +236,8 @@ def build_snapshot(engine=None, planner=None, extra: dict | None = None) -> dict
             # and whether the serving tier should expect throttled waves
             "compact_debt": debt,
             "backpressure": bool(debt),
+            # pipelined group commit: sealed-but-not-durable waves (0/1)
+            "commit_pipeline_depth": st.ops.get("d_commit_pipeline_depth", 0),
         }
     if planner is not None:
         snap["waves"] = planner.flushes

@@ -21,13 +21,17 @@ repo convention is milliseconds for latency histograms), and the exact
 ``min``/``max``/``sum`` are tracked alongside, so ``max`` (and p100) are
 never quantized.  Non-positive values count in a dedicated zero bucket.
 
-Everything here is dependency-free stdlib; thread safety is a single
-allocation-free append path (dict int increments under the GIL), matching
-how ``EngineStats`` is already shared.
+Everything here is dependency-free stdlib.  The histogram/counter write
+paths take a per-metric lock: spans record from shard-executor, commit-
+sequencer, and background-compaction worker threads (ISSUE 10), and an
+unlocked ``self.n += 1`` read-modify-write drops increments under that
+concurrency.  Gauges stay lock-free — a single reference assignment is
+atomic and last-write-wins is their contract anyway.
 """
 from __future__ import annotations
 
 import math
+import threading
 from typing import Iterable
 
 #: sub-buckets per power of two — fixed FOREVER at the format level:
@@ -49,7 +53,7 @@ def bucket_value(idx: int) -> float:
 class Histogram:
     """Sparse log-bucket histogram with exact-merge semantics."""
 
-    __slots__ = ("counts", "n", "total", "vmin", "vmax", "zeros")
+    __slots__ = ("counts", "n", "total", "vmin", "vmax", "zeros", "_lock")
 
     def __init__(self, samples: Iterable[float] = ()):
         self.counts: dict[int, int] = {}
@@ -58,58 +62,62 @@ class Histogram:
         self.vmin = math.inf
         self.vmax = -math.inf
         self.zeros = 0
+        self._lock = threading.Lock()
         for v in samples:
             self.record(v)
 
     # -- write path ---------------------------------------------------------
     def record(self, v: float) -> None:
         """O(1), allocation-free (dict slot reuse after first touch)."""
-        self.n += 1
-        self.total += v
-        if v < self.vmin:
-            self.vmin = v
-        if v > self.vmax:
-            self.vmax = v
-        if v <= 0.0:
-            self.zeros += 1
-            return
-        b = math.floor(math.log(v) * _INV_LOG2)
-        self.counts[b] = self.counts.get(b, 0) + 1
+        with self._lock:
+            self.n += 1
+            self.total += v
+            if v < self.vmin:
+                self.vmin = v
+            if v > self.vmax:
+                self.vmax = v
+            if v <= 0.0:
+                self.zeros += 1
+                return
+            b = math.floor(math.log(v) * _INV_LOG2)
+            self.counts[b] = self.counts.get(b, 0) + 1
 
     def merge(self, other: "Histogram") -> "Histogram":
         """Fold ``other`` into ``self`` (exact: fixed shared boundaries).
         Returns ``self`` for chaining."""
-        for b, c in other.counts.items():
-            self.counts[b] = self.counts.get(b, 0) + c
-        self.n += other.n
-        self.total += other.total
-        self.zeros += other.zeros
-        self.vmin = min(self.vmin, other.vmin)
-        self.vmax = max(self.vmax, other.vmax)
-        return self
+        with self._lock:
+            for b, c in other.counts.items():
+                self.counts[b] = self.counts.get(b, 0) + c
+            self.n += other.n
+            self.total += other.total
+            self.zeros += other.zeros
+            self.vmin = min(self.vmin, other.vmin)
+            self.vmax = max(self.vmax, other.vmax)
+            return self
 
     # -- read path ----------------------------------------------------------
     def percentile(self, q: float) -> float:
         """Nearest-rank percentile ``q`` ∈ [0, 100] over the recorded
         distribution; bucket geometric midpoints, exact at the extremes
         (p0 → true min, p100 → true max).  0.0 on an empty histogram."""
-        if self.n == 0:
-            return 0.0
-        if q <= 0:
-            return self.vmin
-        if q >= 100:
+        with self._lock:
+            if self.n == 0:
+                return 0.0
+            if q <= 0:
+                return self.vmin
+            if q >= 100:
+                return self.vmax
+            rank = max(1, math.ceil(q / 100.0 * self.n))
+            if rank <= self.zeros:
+                return 0.0
+            seen = self.zeros
+            for b in sorted(self.counts):
+                seen += self.counts[b]
+                if seen >= rank:
+                    # clamp into the true observed range so a one-bucket
+                    # histogram reports its real sample, not the midpoint
+                    return min(max(bucket_value(b), self.vmin), self.vmax)
             return self.vmax
-        rank = max(1, math.ceil(q / 100.0 * self.n))
-        if rank <= self.zeros:
-            return 0.0
-        seen = self.zeros
-        for b in sorted(self.counts):
-            seen += self.counts[b]
-            if seen >= rank:
-                # clamp into the true observed range so a one-bucket
-                # histogram reports its real sample, not the midpoint
-                return min(max(bucket_value(b), self.vmin), self.vmax)
-        return self.vmax
 
     @property
     def mean(self) -> float:
@@ -132,13 +140,15 @@ class Histogram:
 class Counter:
     """Monotone counter (wire format: one int)."""
 
-    __slots__ = ("value",)
+    __slots__ = ("value", "_lock")
 
     def __init__(self):
         self.value = 0
+        self._lock = threading.Lock()
 
     def inc(self, n: int = 1) -> None:
-        self.value += n
+        with self._lock:
+            self.value += n
 
 
 class Gauge:

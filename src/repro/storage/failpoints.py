@@ -41,6 +41,7 @@ a crash point.
 from __future__ import annotations
 
 import os
+import threading
 from dataclasses import dataclass, field
 
 ENV = "REPRO_FAILPOINT"
@@ -93,6 +94,12 @@ class FailPlan:
 
 _ACTIVE: FailPlan | None = None
 
+# Faultable ops may run on worker threads (shard executor, commit
+# sequencer, background compaction) with one plan armed process-wide:
+# the counter mutation must be atomic or two concurrent ops could both
+# claim the crash_at slot (double fire) or skip it entirely.
+_PLAN_LOCK = threading.Lock()
+
 
 def arm(plan: FailPlan) -> None:
     global _ACTIVE
@@ -122,16 +129,27 @@ class armed:
         disarm()
 
 
+def _tick(plan: FailPlan, site: str) -> tuple[bool, int]:
+    """Atomically count one matching op; → (should_crash, op_index)."""
+    with _PLAN_LOCK:
+        if plan.fired or not plan._matches(site):
+            return False, 0
+        plan.seen += 1
+        plan.hits.append(site)
+        if plan.seen == plan.crash_at:
+            plan.fired = True
+            return True, plan.seen
+        return False, plan.seen
+
+
 def hit(site: str) -> None:
     """A faultable op with no payload (fsync, rename): maybe die here."""
     plan = _ACTIVE
-    if plan is None or plan.fired or not plan._matches(site):
+    if plan is None:
         return
-    plan.seen += 1
-    plan.hits.append(site)
-    if plan.seen == plan.crash_at:
-        plan.fired = True
-        raise InjectedCrash(site, plan.seen)
+    crash, idx = _tick(plan, site)
+    if crash:
+        raise InjectedCrash(site, idx)
 
 
 def write(site: str, f, data: bytes) -> None:
@@ -142,20 +160,18 @@ def write(site: str, f, data: bytes) -> None:
     the worst case a real power cut can leave behind.
     """
     plan = _ACTIVE
-    if plan is None or plan.fired or not plan._matches(site):
+    if plan is None:
         f.write(data)
         return
-    plan.seen += 1
-    plan.hits.append(site)
-    if plan.seen != plan.crash_at:
+    crash, idx = _tick(plan, site)
+    if not crash:
         f.write(data)
         return
-    plan.fired = True
     if plan.mode == "torn" and data:
         keep = min(len(data) - 1, max(0, int(len(data) * plan.torn_keep)))
         f.write(data[:keep])
         f.flush()
-    raise InjectedCrash(site, plan.seen)
+    raise InjectedCrash(site, idx)
 
 
 def plan_from_env(env: str | None = None) -> FailPlan | None:

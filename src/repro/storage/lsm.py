@@ -116,6 +116,12 @@ SEGMENT_TARGET_ENV = "REPRO_SEGMENT_TARGET_BYTES"
 #: ``commit_epoch`` boundary before the merge pauses resumably
 #: (default 0 = unlimited, i.e. no backpressure throttling)
 COMPACT_BUDGET_ENV = "REPRO_COMPACT_BUDGET_BYTES"
+#: ``REPRO_BG_COMPACT`` — run budgeted merges on a per-store daemon
+#: worker: ``commit_epoch`` enqueues compaction debt instead of paying
+#: it inline (default 0 = inline, the pre-ISSUE-10 behavior)
+BG_COMPACT_ENV = "REPRO_BG_COMPACT"
+
+_TRUTHY = ("1", "true", "on", "yes")
 
 
 def resolve_level_ratio(explicit: int | None = None) -> int:
@@ -153,6 +159,14 @@ def resolve_compact_budget_bytes(explicit: int | None = None) -> int:
     if val < 0:
         raise ValueError(f"compact_budget_bytes must be >= 0, got {val}")
     return val
+
+
+def resolve_bg_compact(explicit: bool | None = None) -> bool:
+    """Resolve the background-compaction switch (arg > env > default
+    off = merges run inline at the commit boundary)."""
+    if explicit is not None:
+        return bool(explicit)
+    return os.environ.get(BG_COMPACT_ENV, "0").strip().lower() in _TRUTHY
 
 
 def default_block_cache(explicit_bytes: int | None = None
@@ -212,7 +226,10 @@ class DurableKV(KVEngine):
     ``REPRO_COMPACT_BUDGET_BYTES``; 0 = unlimited), ``flat_reads``
     disable the per-level binary search and probe every segment — the
     benchmark A/B switch that reproduces the pre-partitioned (PR-5)
-    read path on the same files."""
+    read path on the same files, ``bg_compact`` move budgeted merges to
+    a per-store daemon worker so ``commit_epoch`` enqueues debt instead
+    of paying it (None → ``REPRO_BG_COMPACT``; the budget still bounds
+    each worker slice, so backpressure flow control is unchanged)."""
 
     def __init__(self, dirname: str, memtable_limit: int = 4096,
                  sync: str | None = None, level_ratio: int | None = None,
@@ -220,7 +237,8 @@ class DurableKV(KVEngine):
                  block_cache: BlockCache | None = None,
                  segment_target_bytes: int | None = None,
                  compact_budget_bytes: int | None = None,
-                 flat_reads: bool = False):
+                 flat_reads: bool = False,
+                 bg_compact: bool | None = None):
         self.dirname = dirname
         self._limit = memtable_limit
         self._ratio = resolve_level_ratio(level_ratio)
@@ -232,6 +250,9 @@ class DurableKV(KVEngine):
         self._flat_reads = bool(flat_reads)
         self._lock = threading.RLock()
         self._mem: dict[bytes, object] = {}
+        #: memtable sealed by a pipelined commit, awaiting its off-thread
+        #: spill — reads consult it between the live memtable and levels
+        self._frozen: dict[bytes, object] | None = None
         self._tables: dict[str, SSTable] = {}  # segment name -> open reader
         self._read_order: list[tuple[MF.SegmentMeta, SSTable]] = []
         self._levels: list[_LevelView] = []
@@ -240,6 +261,13 @@ class DurableKV(KVEngine):
         #: merged bytes spent by the most recent commit/spill boundary —
         #: the per-wave compaction cost the backpressure tests assert on
         self.last_compact_bytes = 0
+        # background compaction worker state (started below, after
+        # recovery, so a recovered paused merge can resume immediately)
+        self._bg = resolve_bg_compact(bg_compact)
+        self._bg_thread: threading.Thread | None = None
+        self._bg_wake = threading.Event()
+        self._bg_stop = threading.Event()
+        self._bg_exc: BaseException | None = None
         os.makedirs(dirname, exist_ok=True)
         self._recover()
         wal_path = os.path.join(dirname, WAL_NAME)
@@ -249,6 +277,14 @@ class DurableKV(KVEngine):
             # a freshly created WAL's directory entry must be durable
             # before any commit claims its contents are
             W.fsync_dir(dirname)
+        if self._bg:
+            self._bg_thread = threading.Thread(
+                target=self._bg_loop, name=f"lsm-compact:{dirname}",
+                daemon=True)
+            self._bg_thread.start()
+            with self._lock:
+                if self._compact_debt_locked() > 0:
+                    self._bg_wake.set()
 
     # ------------------------------------------------------------------
     # recovery
@@ -348,10 +384,20 @@ class DurableKV(KVEngine):
     # ------------------------------------------------------------------
     # KVEngine surface
     # ------------------------------------------------------------------
+    def _raise_bg(self) -> None:
+        """Surface a background-worker failure (IO error, injected
+        crash) on the caller thread: sticky — once the worker has died,
+        every subsequent mutation re-raises until close().  Callers must
+        hold no assumption that the merge it was running completed."""
+        exc = self._bg_exc
+        if exc is not None:
+            raise exc
+
     def put(self, key: bytes, value: bytes) -> None:
         """Upsert ``key`` → WAL buffer + memtable (durable at the next
         ``commit_epoch``).  O(1)."""
         self._count("put")
+        self._raise_bg()
         with self._lock:
             self._wal.append_put(key, value)
             self._mem[key] = value
@@ -360,6 +406,7 @@ class DurableKV(KVEngine):
         """Tombstone ``key`` (shadows every older level until a bottom
         merge drops it).  O(1)."""
         self._count("delete")
+        self._raise_bg()
         with self._lock:
             self._wal.append_delete(key)
             self._mem[key] = TOMBSTONE
@@ -381,6 +428,9 @@ class DurableKV(KVEngine):
         self._count("get")
         with self._lock:
             v = self._mem.get(key)
+            if v is None and self._frozen is not None:
+                # sealed by a pipelined commit, spill still in flight
+                v = self._frozen.get(key)
             if v is not None:
                 return None if v is TOMBSTONE else v  # type: ignore[return-value]
             hashes: tuple[int, int] | None = None
@@ -423,7 +473,13 @@ class DurableKV(KVEngine):
             mem = sorted((k, v) for k, v in self._mem.items()
                          if k.startswith(prefix))
             runs.append([(k, 0, v) for k, v in mem])
-            rank = 1
+            if self._frozen is not None:
+                # the sealed-not-yet-spilled wave: older than the live
+                # memtable, newer than every segment
+                frz = sorted((k, v) for k, v in self._frozen.items()
+                             if k.startswith(prefix))
+                runs.append([(k, 1, v) for k, v in frz])
+            rank = 2
             for view in self._levels:
                 for meta, seg in view.entries:
                     r = _meta_range(meta)
@@ -457,9 +513,10 @@ class DurableKV(KVEngine):
     # ------------------------------------------------------------------
     def commit_epoch(self, epoch: int) -> None:
         """Group-commit the buffered wave at ``epoch`` (monotone), spill
-        the memtable if over its limit, then run compaction up to the
-        per-wave byte budget (resuming any merge a previous wave
-        paused)."""
+        the memtable if over its limit, then pay compaction debt up to
+        the per-wave byte budget — inline, or by waking the background
+        worker when ``bg_compact`` is on."""
+        self._raise_bg()
         with self._lock:
             # monotone: a lagging engine sharing this store (e.g. a
             # device mirror whose own counter trails the host's) must
@@ -480,18 +537,57 @@ class DurableKV(KVEngine):
             self._inval_buf.clear()
             if len(self._mem) >= self._limit:
                 self._spill_locked()
-            self._maybe_compact_locked()
+            self._kick_compaction_locked()
+
+    def seal_commit(self, epoch: int):
+        """Synchronous half of a pipelined group commit (monotone, same
+        skip rule as :meth:`commit_epoch`).  Under the lock: seal the
+        WAL buffer (cheap byte copy — no IO), advance the epoch
+        bookkeeping, and *freeze* an over-limit memtable so the next
+        wave's writes land in a fresh one.  Returns None when there is
+        nothing to commit, else a zero-arg ``complete`` closure for the
+        commit sequencer: it writes + fsyncs the sealed bytes WITHOUT
+        the engine lock (so the fsync overlaps the caller's compute),
+        then — back under the lock — spills the frozen memtable and
+        kicks compaction.  The caller must run ``complete`` exactly once
+        and join it before the next seal (the sequencer's depth-1
+        invariant); until it finishes, the epoch is sealed but NOT
+        durable and must not be advertised as such."""
+        with self._lock:
+            self._raise_bg()
+            epoch = max(epoch, self._epoch)
+            if (epoch == self._epoch and self._wal.pending_bytes() == 0
+                    and not self._inval_buf and len(self._mem) < self._limit):
+                return None
+            sealed = self._wal.seal(epoch)
+            self._epoch = epoch
+            self._manifest.epoch = epoch
+            self._pending_inval.extend(self._inval_buf)
+            self._inval_buf.clear()
+            if len(self._mem) >= self._limit:
+                assert self._frozen is None, \
+                    "pipelined commit overlap exceeded depth 1"
+                self._frozen = self._mem
+                self._mem = {}
+
+        def complete() -> None:
+            self._wal.write_sealed(sealed, epoch)
+            with self._lock:
+                self._spill_frozen_locked()
+                self._kick_compaction_locked()
+        return complete
 
     def spill(self) -> None:
         """Commit the open wave and force the memtable to a level-0
         segment regardless of the limit (then run any triggered leveled
         merges).  Maintenance/benchmark hook: after it, every committed
         record is served from segment files — a truly cold read path."""
+        self._raise_bg()
         with self._lock:
             if self._wal.pending_bytes() or self._inval_buf:
                 self.commit_epoch(self._epoch)
             self._spill_locked()
-            self._maybe_compact_locked()
+            self._kick_compaction_locked()
 
     def _store_manifest_locked(self) -> None:
         """Swap the manifest carrying the LIVE counters, not whatever it
@@ -505,17 +601,32 @@ class DurableKV(KVEngine):
     def _spill_locked(self) -> None:
         """Freeze the (fully committed) memtable into a new level-0
         segment and make it live: segment write + fsync → manifest swap →
-        WAL reset.  Each arrow is a crash boundary recovery handles
+        WAL truncate.  Each arrow is a crash boundary recovery handles
         (orphan sweep / idempotent WAL replay)."""
         if not self._mem:
             return
         with obs.span("lsm.spill", records=len(self._mem)):
-            self._spill_impl()
+            self._spill_items_locked(self._mem)
+            self._mem = {}
 
-    def _spill_impl(self) -> None:
+    def _spill_frozen_locked(self) -> None:
+        """Spill the memtable a pipelined ``seal_commit`` froze (no-op
+        if it froze none).  Runs on the sequencer worker; the WAL
+        truncate inside preserves the next wave's buffered appends
+        (``WAL.truncate`` drops the file, not the buffer).  The frozen
+        dict is released only after the manifest swap succeeds, so a
+        failure here leaves it readable and its records replayable."""
+        if self._frozen is None:
+            return
+        if self._frozen:
+            with obs.span("lsm.spill", records=len(self._frozen)):
+                self._spill_items_locked(self._frozen)
+        self._frozen = None
+
+    def _spill_items_locked(self, mem: dict) -> None:
         name = self._manifest.alloc_segment()
         path = os.path.join(self.dirname, name)
-        stats = write_sstable(path, sorted(self._mem.items()),
+        stats = write_sstable(path, sorted(mem.items()),
                               sync=self._sync == "fsync",
                               bloom_bits_per_key=self._bloom_bits)
         self._manifest.segments.append(MF.SegmentMeta(
@@ -526,8 +637,7 @@ class DurableKV(KVEngine):
         self._store_manifest_locked()
         self._tables[name] = self._open_table(name)
         self._rebuild_read_order()
-        self._mem = {}
-        self._wal.reset()
+        self._wal.truncate()
 
     # ------------------------------------------------------------------
     # leveled compaction: partitioned, budgeted, resumable
@@ -713,6 +823,56 @@ class DurableKV(KVEngine):
                 break
         self.last_compact_bytes = spent
 
+    def _kick_compaction_locked(self) -> None:
+        """Compaction admission at a commit/spill boundary: pay the debt
+        inline (up to the budget), or — with ``bg_compact`` on — wake
+        the daemon worker and return immediately, leaving the debt on
+        the ``compact_debt`` gauge for backpressure."""
+        if self._bg_thread is not None:
+            if self._manifest.compaction is not None \
+                    or self._compact_debt_locked() > 0:
+                self._bg_wake.set()
+        else:
+            self._maybe_compact_locked()
+
+    def _bg_loop(self) -> None:
+        """Daemon worker: one budget-bounded merge slice per wakeup,
+        re-arming itself while debt remains so the lock is released
+        between slices (readers and commits interleave).  Any failure —
+        IO error or an injected crash firing on this thread — parks in
+        ``_bg_exc`` and is re-raised by the next mutation on the caller
+        thread (:meth:`_raise_bg`)."""
+        while True:
+            self._bg_wake.wait()
+            self._bg_wake.clear()
+            if self._bg_stop.is_set():
+                return
+            try:
+                with self._lock:
+                    if self._closed:
+                        return
+                    self._maybe_compact_locked()
+                    more = (self._manifest.compaction is not None
+                            or self._compact_debt_locked() > 0)
+                if more:
+                    self._bg_wake.set()
+            except BaseException as e:          # noqa: BLE001 - re-raised
+                self._bg_exc = e
+                return
+
+    def _stop_bg(self) -> None:
+        """Stop + join the worker (idempotent; close() and tests use it;
+        the fuzz harness's ``abandon`` calls it too — a dead process has
+        no threads)."""
+        t = self._bg_thread
+        if t is None:
+            return
+        self._bg_stop.set()
+        self._bg_wake.set()
+        if t is not threading.current_thread():
+            t.join(timeout=10.0)
+        self._bg_thread = None
+
     def compact_debt(self) -> int:
         """Outstanding merge work, in bytes — the backpressure gauge.
 
@@ -722,22 +882,25 @@ class DurableKV(KVEngine):
         through ``QueryEngine.stats`` / ``stats_snapshot()`` as
         ``compact_debt``."""
         with self._lock:
-            lb = self._level_bytes()
-            counts = self._manifest.level_counts()
-            debt = 0
-            if counts.get(0, 0) >= self._ratio:
-                debt += lb.get(0, 0)
-            for level, b in lb.items():
-                if level >= 1:
-                    debt += max(0, b - self._cap_bytes(level))
-            st = self._manifest.compaction
-            if st is not None:
-                names = set(st.inputs)
-                in_bytes = sum(m.bytes for m in self._manifest.segments
-                               if m.name in names)
-                done = sum(o.bytes for o in st.outputs)
-                debt += max(0, in_bytes - done)
-            return debt
+            return self._compact_debt_locked()
+
+    def _compact_debt_locked(self) -> int:
+        lb = self._level_bytes()
+        counts = self._manifest.level_counts()
+        debt = 0
+        if counts.get(0, 0) >= self._ratio:
+            debt += lb.get(0, 0)
+        for level, b in lb.items():
+            if level >= 1:
+                debt += max(0, b - self._cap_bytes(level))
+        st = self._manifest.compaction
+        if st is not None:
+            names = set(st.inputs)
+            in_bytes = sum(m.bytes for m in self._manifest.segments
+                           if m.name in names)
+            done = sum(o.bytes for o in st.outputs)
+            debt += max(0, in_bytes - done)
+        return debt
 
     def _abandon_compaction_locked(self) -> None:
         """Drop a paused merge (major compaction supersedes it): the
@@ -763,6 +926,7 @@ class DurableKV(KVEngine):
         explicit maintenance/benchmark operation; the online trigger
         path (:meth:`commit_epoch` → ``_maybe_compact_locked``) only
         ever merges one victim + overlap at a time."""
+        self._raise_bg()
         with self._lock:
             # segments may only ever hold committed records (recovery
             # trusts them unconditionally) — close the open wave first
@@ -862,12 +1026,20 @@ class DurableKV(KVEngine):
 
     # ------------------------------------------------------------------
     def close(self) -> None:
-        """Clean shutdown: commit any buffered tail so a reopen is
-        byte-identical, then release file handles (idempotent).  A
-        paused merge stays paused — its manifest state survives and the
-        reopened store resumes it."""
+        """Clean shutdown: stop the background worker, commit any
+        buffered tail so a reopen is byte-identical, then release file
+        handles (idempotent).  A paused merge stays paused — its
+        manifest state survives and the reopened store resumes it.  A
+        parked background failure RE-RAISES here instead of being
+        swallowed: the worker may have died mid-merge with in-memory
+        level state partially mutated, and a clean close would commit
+        and publish from that wounded state.  Raising makes the caller
+        treat the store as crashed — reopen recovers from the on-disk
+        state, which the merge only ever mutates atomically."""
         if self._closed:
             return
+        self._stop_bg()
+        self._raise_bg()
         with self._lock:
             if self._wal.pending_bytes() or self._inval_buf:
                 self.commit_epoch(self._epoch)
@@ -886,11 +1058,13 @@ def durable_engine_factory(root: str, memtable_limit: int = 4096,
                            bloom_bits: int | None = None,
                            block_cache: BlockCache | None = None,
                            segment_target_bytes: int | None = None,
-                           compact_budget_bytes: int | None = None
+                           compact_budget_bytes: int | None = None,
+                           bg_compact: bool | None = None
                            ) -> Callable[[int], DurableKV]:
     """Engine factory for ``ShardedPathStore``: shard *i* gets its own
     WAL + segment directory ``<root>/shard_<i>`` — per-shard group commit
-    and compaction, the per-shard isolation of the in-memory tier kept on
+    and compaction (and, with ``bg_compact``, a per-shard compaction
+    worker), the per-shard isolation of the in-memory tier kept on
     disk.  ``block_cache`` (if any) is shared by every shard: one global
     byte budget, hot shards take more of it."""
     def make(i: int) -> DurableKV:
@@ -899,7 +1073,8 @@ def durable_engine_factory(root: str, memtable_limit: int = 4096,
                          level_ratio=level_ratio, bloom_bits=bloom_bits,
                          block_cache=block_cache,
                          segment_target_bytes=segment_target_bytes,
-                         compact_budget_bytes=compact_budget_bytes)
+                         compact_budget_bytes=compact_budget_bytes,
+                         bg_compact=bg_compact)
     return make
 
 
@@ -913,7 +1088,10 @@ def open_durable_store(root: str, n_shards: int | None = None,
                        bloom_bits: int | None = None,
                        block_cache_bytes: int | None = None,
                        segment_target_bytes: int | None = None,
-                       compact_budget_bytes: int | None = None):
+                       compact_budget_bytes: int | None = None,
+                       bg_compact: bool | None = None,
+                       shard_workers: int | None = None,
+                       commit_pipeline: bool | None = None):
     """Open (or create) a durable path store rooted at ``root``.
 
     ``n_shards == 1`` → a ``PathStore`` over one ``DurableKV``;
@@ -921,7 +1099,8 @@ def open_durable_store(root: str, n_shards: int | None = None,
     directory per shard.  Reopening an existing root recovers from disk
     — zero re-ingestion.  ``level_ratio`` / ``bloom_bits`` /
     ``block_cache_bytes`` / ``segment_target_bytes`` /
-    ``compact_budget_bytes`` default to their ``REPRO_*`` env knobs (see
+    ``compact_budget_bytes`` / ``bg_compact`` / ``shard_workers`` /
+    ``commit_pipeline`` default to their ``REPRO_*`` env knobs (see
     docs/STORAGE.md); the block cache is ONE shared LRU across all
     shards, so the byte budget is store-global.
 
@@ -964,7 +1143,8 @@ def open_durable_store(root: str, n_shards: int | None = None,
                                    sync=sync, level_ratio=level_ratio,
                                    bloom_bits=bloom_bits, block_cache=cache,
                                    segment_target_bytes=segment_target_bytes,
-                                   compact_budget_bytes=compact_budget_bytes),
+                                   compact_budget_bytes=compact_budget_bytes,
+                                   bg_compact=bg_compact),
                          depth_budget=depth_budget)
     return ShardedPathStore(
         n_shards=n_shards,
@@ -972,5 +1152,7 @@ def open_durable_store(root: str, n_shards: int | None = None,
             root, memtable_limit=memtable_limit, sync=sync,
             level_ratio=level_ratio, bloom_bits=bloom_bits,
             block_cache=cache, segment_target_bytes=segment_target_bytes,
-            compact_budget_bytes=compact_budget_bytes),
-        depth_budget=depth_budget)
+            compact_budget_bytes=compact_budget_bytes,
+            bg_compact=bg_compact),
+        depth_budget=depth_budget, shard_workers=shard_workers,
+        commit_pipeline=commit_pipeline)

@@ -125,30 +125,52 @@ class WAL:
         return len(self._buf)
 
     # -- group commit -------------------------------------------------------
-    def commit(self, epoch: int) -> None:
-        """One OS write for the buffered wave + its COMMIT marker, then
-        flush (+fsync).  The commit marker is what makes the wave real:
-        replay drops everything after the last valid COMMIT."""
-        with obs.span("wal.commit", epoch=epoch,
-                      bytes=len(self._buf)):
-            self._buf += _frame(bytes([COMMIT]) + _U64.pack(epoch))
-            FP.write("wal.commit", self._f, bytes(self._buf))
-            self._buf.clear()
+    def seal(self, epoch: int) -> bytes:
+        """Freeze the buffered wave + its COMMIT marker into one byte
+        string and clear the buffer — the synchronous half of a commit.
+        The caller owns writing the sealed bytes (``write_sealed``);
+        until it does, the wave is neither durable nor lost: appends for
+        the *next* wave can start buffering immediately, which is what
+        lets a pipelined commit overlap wave e's fsync with wave e+1's
+        compute."""
+        self._buf += _frame(bytes([COMMIT]) + _U64.pack(epoch))
+        sealed = bytes(self._buf)
+        self._buf.clear()
+        return sealed
+
+    def write_sealed(self, sealed: bytes, epoch: int) -> None:
+        """One OS write for a sealed wave, then flush (+fsync) — the
+        (possibly off-thread) durability half.  The commit marker inside
+        ``sealed`` is what makes the wave real: replay drops everything
+        after the last valid COMMIT."""
+        with obs.span("wal.commit", epoch=epoch, bytes=len(sealed)):
+            FP.write("wal.commit", self._f, sealed)
             self._f.flush()
             if self.sync == "fsync":
                 with obs.span("wal.fsync"):
                     FP.hit("wal.fsync")
                     os.fsync(self._f.fileno())
 
-    def reset(self) -> None:
-        """Truncate the log (called after a memtable spill: every committed
-        record now lives in a segment; the manifest swap made that real)."""
-        self._buf.clear()
+    def commit(self, epoch: int) -> None:
+        """Synchronous group commit: seal + write + flush (+fsync)."""
+        self.write_sealed(self.seal(epoch), epoch)
+
+    def truncate(self) -> None:
+        """Truncate the log *file*, preserving any buffered-but-unsealed
+        appends (called after a memtable spill: every committed record
+        now lives in a segment; the manifest swap made that real.  Under
+        a pipelined commit the spill runs off-thread while the next wave
+        is already buffering — those records must survive)."""
         self._f.close()
         self._f = open(self.path, "wb")
         self._f.flush()
         if self.sync == "fsync":
             os.fsync(self._f.fileno())
+
+    def reset(self) -> None:
+        """Truncate the log and drop the buffer (full reset)."""
+        self._buf.clear()
+        self.truncate()
 
     def close(self) -> None:
         """Release the file handle (buffered, uncommitted records drop —

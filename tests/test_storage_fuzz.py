@@ -123,7 +123,11 @@ class _Workload:
             self.kv = _open(self.d, self.budget, self.sync)
 
     def abandon(self) -> None:
-        """Release handles like a dead process (no commit)."""
+        """Release handles like a dead process (no commit).  The
+        background compaction worker is stopped first — a dead process
+        has no threads, and a live one would keep mutating the store
+        we are about to declare dead."""
+        self.kv._stop_bg()
         try:
             self.kv._wal._f.close()
         except Exception:
@@ -136,18 +140,23 @@ class _Workload:
 
 
 def _check_invariants(kv: DurableKV, d: str, seed: int) -> None:
-    """No orphans, no unpaid-for files, partitioned-level sanity."""
-    live = set(kv._manifest.segment_names())
-    if kv._manifest.compaction is not None:
-        live.update(o.name for o in kv._manifest.compaction.outputs)
-    on_disk = {n for n in os.listdir(d) if n.endswith(".seg")}
-    assert on_disk == live, f"seed {seed}: disk/manifest drift"
-    for view in kv._levels:
-        if view.partitioned:
-            for a, b in zip(view.entries, view.entries[1:]):
-                assert bytes.fromhex(b[0].min_key) > \
-                    bytes.fromhex(a[0].max_key), \
-                    f"seed {seed}: level {view.level} ranges overlap"
+    """No orphans, no unpaid-for files, partitioned-level sanity.
+
+    Runs under ``kv._lock``: the background compaction worker mutates
+    the manifest, the levels, and the segment files atomically w.r.t.
+    that lock, so a locked read always sees a consistent cut."""
+    with kv._lock:
+        live = set(kv._manifest.segment_names())
+        if kv._manifest.compaction is not None:
+            live.update(o.name for o in kv._manifest.compaction.outputs)
+        on_disk = {n for n in os.listdir(d) if n.endswith(".seg")}
+        assert on_disk == live, f"seed {seed}: disk/manifest drift"
+        for view in kv._levels:
+            if view.partitioned:
+                for a, b in zip(view.entries, view.entries[1:]):
+                    assert bytes.fromhex(b[0].min_key) > \
+                        bytes.fromhex(a[0].max_key), \
+                        f"seed {seed}: level {view.level} ranges overlap"
 
 
 def _fuzz_one(root: str, seed: int) -> None:
